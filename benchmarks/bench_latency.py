@@ -1,0 +1,62 @@
+"""Paper Fig. 5 — scheduling latency by scenario (initial allocation vs
+preemption/reallocation), RAS vs WPS.
+
+Validates (§VI.A): RAS initial LP allocation < 6 ms, WPS 140–205 ms;
+RAS preemption < 100 ms, WPS > 250 ms; RAS reallocation ≈ 10–17 ms-scale
+and far below WPS's."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import csv_row, emit
+from repro.sim.engine import ExperimentConfig, run_experiment
+
+TRACES = ("weighted1", "weighted2", "weighted3", "weighted4")
+
+
+def run(n_frames: int = 95, seed: int = 7) -> dict:
+    table: dict = {}
+    t0 = time.perf_counter()
+    for sched in ("ras", "wps"):
+        for trace in TRACES:
+            m = run_experiment(ExperimentConfig(
+                scheduler=sched, trace=trace, n_frames=n_frames, seed=seed))
+            table[f"{sched}/{trace}"] = {
+                "hp_alloc_ms": round(1e3 * m.hp_alloc_latency.mean, 3),
+                "hp_preempt_ms": round(1e3 * m.hp_preempt_latency.mean, 3),
+                "lp_alloc_ms": round(1e3 * m.lp_alloc_latency.mean, 3),
+                "lp_realloc_ms": round(1e3 * m.lp_realloc_latency.mean, 3),
+                "realloc_successes": m.lp_realloc_success,
+            }
+    elapsed = time.perf_counter() - t0
+    ras4, wps4 = table["ras/weighted4"], table["wps/weighted4"]
+    checks = {
+        "ras_lp_alloc_under_6ms": all(
+            table[f"ras/{t}"]["lp_alloc_ms"] < 6.0 for t in TRACES
+        ),
+        "wps_lp_alloc_in_paper_range": all(
+            100.0 < table[f"wps/{t}"]["lp_alloc_ms"] < 260.0 for t in TRACES
+        ),
+        "ras_preempt_under_100ms": all(
+            table[f"ras/{t}"]["hp_preempt_ms"] < 100.0 for t in TRACES
+        ),
+        "wps_preempt_over_250ms": all(
+            table[f"wps/{t}"]["hp_preempt_ms"] > 250.0 for t in TRACES
+        ),
+        "ras_reallocates_substantially": all(
+            table[f"ras/{t}"]["realloc_successes"] > 20
+            for t in ("weighted3", "weighted4")
+        ),
+    }
+    out = {"table": table, "paper_checks": checks}
+    emit("fig5_latency", out)
+    csv_row("fig5_latency", elapsed / 8 * 1e6,
+            f"checks_passed={sum(checks.values())}/{len(checks)}")
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

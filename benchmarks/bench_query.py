@@ -1,0 +1,115 @@
+"""Scheduling data-structure microbenchmark (the paper's core trade,
+isolated): containment query on the availability model vs the
+overlapping-range search on raw task lists, plus the vectorised JAX path
+and the fleet-scale Pallas window-query kernel (interpret mode)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, emit, timeit_us
+from repro.core.scheduler import OpCounter, RASScheduler
+from repro.core.tasks import LP2_CONFIG, LPRequest, Priority, Task
+from repro.core.windows import AvailabilityList, multi_find_slot
+from repro.core.wps import WPSScheduler
+
+
+def _loaded_ras(n_dev=4, n_tasks=24, seed=0):
+    s = RASScheduler(n_dev, 20e6, seed=seed)
+    rng = np.random.default_rng(seed)
+    for i in range(n_tasks // 2):
+        t = float(rng.uniform(0, 60))
+        req = LPRequest(
+            [Task(Priority.LOW, i % n_dev, t, t + 80.0, 0) for _ in range(2)],
+            i % n_dev, t,
+        )
+        s.schedule_lp(req, t)
+    return s
+
+
+def _loaded_wps(n_dev=4, n_tasks=24, seed=0):
+    s = WPSScheduler(n_dev, 20e6, seed=seed)
+    rng = np.random.default_rng(seed)
+    for i in range(n_tasks // 2):
+        t = float(rng.uniform(0, 60))
+        req = LPRequest(
+            [Task(Priority.LOW, i % n_dev, t, t + 80.0, 0) for _ in range(2)],
+            i % n_dev, t,
+        )
+        s.schedule_lp(req, t)
+    return s
+
+
+def run() -> dict:
+    out = {}
+
+    ras = _loaded_ras()
+    c = OpCounter()
+    al = ras.devices[0].list_for(LP2_CONFIG)
+    us_ras = timeit_us(lambda: ras._find_slot_counted(al, 30.0, 90.0, 17.2, c),
+                       iters=2000)
+    out["ras_containment_query_us"] = round(us_ras, 3)
+    csv_row("query_ras_containment", us_ras, "python_reference")
+
+    wps = _loaded_wps()
+    c2 = OpCounter()
+    us_wps = timeit_us(
+        lambda: wps._query_device(0, 30.0, 90.0, 17.2, 2, c2), iters=2000
+    )
+    out["wps_overlap_search_us"] = round(us_wps, 3)
+    csv_row("query_wps_overlap_search", us_wps, "python_reference")
+    out["speedup_python"] = round(us_wps / max(us_ras, 1e-9), 2)
+
+    # vectorised multi-containment (all devices at once, jitted)
+    arrs = [d.list_for(LP2_CONFIG).to_arrays() for d in ras.devices]
+    t1 = np.stack([a["t1"] for a in arrs])
+    t2 = np.stack([a["t2"] for a in arrs])
+    valid = np.stack([a["valid"] for a in arrs])
+    import jax
+
+    f = lambda: jax.block_until_ready(
+        multi_find_slot(t1, t2, valid, 30.0, 90.0, 17.2)
+    )
+    us_jax = timeit_us(f, iters=300)
+    out["jax_multi_containment_us"] = round(us_jax, 3)
+    csv_row("query_jax_multi_containment", us_jax, "4_devices_vmapped")
+
+    # fleet-scale Pallas kernel (interpret on CPU; TPU target)
+    from repro.kernels.window_query.ops import window_query_op
+
+    big_t1 = np.repeat(t1, 256, axis=0)
+    big_t2 = np.repeat(t2, 256, axis=0)
+    big_v = np.repeat(valid, 256, axis=0)
+    g = lambda: jax.block_until_ready(
+        window_query_op(big_t1, big_t2, big_v, 30.0, 90.0, 17.2,
+                        force_kernel=True, interpret=True)
+    )
+    us_kernel = timeit_us(g, iters=5, warmup=1)
+    out["pallas_window_query_1024dev_us"] = round(us_kernel, 3)
+    csv_row("query_pallas_1024dev", us_kernel, "interpret_mode_cpu")
+
+    # fully-jitted placement step (core/jax_state.py): the whole LP
+    # decision (link reserve + multi-containment + bisect commits) as one
+    # XLA program.
+    from repro.core.jax_state import CFG_INDEX, export_state, lp_place
+    import jax.numpy as jnp
+
+    st = export_state(_loaded_ras())
+    f = lp_place.lower(st, jnp.asarray(0), jnp.asarray(30.0),
+                       jnp.asarray(90.0), cfg_idx=CFG_INDEX["lp2"],
+                       n_tasks=4).compile()
+    h = lambda: jax.block_until_ready(
+        f(st, jnp.asarray(0), jnp.asarray(30.0), jnp.asarray(90.0))
+    )
+    us_place = timeit_us(h, iters=200)
+    out["jax_lp_place_4tasks_us"] = round(us_place, 3)
+    csv_row("query_jax_lp_place_4tasks", us_place, "full_jitted_decision")
+
+    emit("query_microbench", out)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

@@ -1,0 +1,77 @@
+"""Aggregate dry-run JSONs into the §Roofline table (deliverable g)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row, emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+COLS = (
+    "arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+    "bottleneck", "useful", "compile_s",
+)
+
+
+def load_records(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r["mesh"] != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def table_rows(recs: list[dict]) -> list[dict]:
+    rows = []
+    for r in recs:
+        rf = r["roofline"]
+        rows.append({
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "mesh": r["mesh"],
+            "compute_s": rf["compute_s"],
+            "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "bottleneck": rf["bottleneck"],
+            "useful": round(rf["useful_flops_ratio"], 3),
+            "model_flops": rf["model_flops"],
+            "compile_s": r["compile_s"],
+        })
+    return rows
+
+
+def run() -> dict:
+    recs = load_records()
+    rows = table_rows(recs)
+    if not rows:
+        csv_row("roofline", 0.0, "no_dryrun_records_yet")
+        return {"rows": []}
+    by_bottleneck: dict = {}
+    for row in rows:
+        by_bottleneck.setdefault(row["bottleneck"], []).append(
+            f'{row["arch"]}/{row["shape"]}'
+        )
+    hdr = f'{"arch":22s} {"shape":12s} {"mesh":8s} {"compute":>10s} {"memory":>10s} {"collective":>10s}  {"bottleneck":10s} {"useful":>7s}'
+    print(hdr)
+    for row in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        print(
+            f'{row["arch"]:22s} {row["shape"]:12s} {row["mesh"]:8s} '
+            f'{row["compute_s"]:10.3e} {row["memory_s"]:10.3e} '
+            f'{row["collective_s"]:10.3e}  {row["bottleneck"]:10s} '
+            f'{row["useful"]:7.3f}'
+        )
+    out = {"rows": rows, "by_bottleneck": by_bottleneck,
+           "n_records": len(rows)}
+    emit("roofline_table", out)
+    csv_row("roofline", 0.0, f"records={len(rows)}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

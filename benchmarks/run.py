@@ -1,0 +1,62 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark) and
+writes full JSON to results/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer seeds/frames (CI mode)")
+    args = ap.parse_args()
+    n_frames = 40 if args.quick else 95
+    seeds = (7,) if args.quick else (7, 11, 23)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+
+    from benchmarks import bench_completion
+    r1 = bench_completion.run(n_frames=n_frames, seeds=seeds)
+
+    from benchmarks import bench_latency
+    r2 = bench_latency.run(n_frames=n_frames)
+
+    from benchmarks import bench_bw_interval
+    r3 = bench_bw_interval.run(n_frames=n_frames, seeds=seeds)
+
+    from benchmarks import bench_congestion
+    r4 = bench_congestion.run(n_frames=n_frames, seeds=seeds)
+
+    from benchmarks import bench_query
+    bench_query.run()
+
+    from benchmarks import roofline
+    roofline.run()
+
+    all_checks = {}
+    for name, r in (("fig4", r1), ("fig5", r2), ("fig7", r3), ("fig8", r4)):
+        for k, v in r["paper_checks"].items():
+            all_checks[f"{name}.{k}"] = bool(v)
+    n_ok = sum(all_checks.values())
+    print(f"# paper-claim checks: {n_ok}/{len(all_checks)} passed "
+          f"({time.time() - t0:.1f}s total)")
+    failed = [k for k, v in all_checks.items() if not v]
+    if failed:
+        print("# FAILED:", ", ".join(failed))
+    os.makedirs("results/bench", exist_ok=True)
+    json.dump(all_checks, open("results/bench/paper_checks.json", "w"),
+              indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Reproduce the paper's two ablations in one script:
+
+- §VI.B  bandwidth-estimation interval sweep (Fig. 7)
+- §VI.C  congestion duty-cycle sweep (Fig. 8 + Table II)
+
+    PYTHONPATH=src python examples/bandwidth_ablation.py
+"""
+
+from repro.sim.engine import ExperimentConfig, run_experiment
+
+print("== Fig 7: bandwidth interval sweep (weighted 4) ==")
+print(f"{'interval':>9s} {'completion':>11s} {'violations':>11s}")
+for interval in (1.5, 5.0, 10.0, 20.0, 30.0):
+    m = run_experiment(ExperimentConfig(
+        scheduler="ras", trace="weighted4", n_frames=95,
+        bw_interval=interval, seed=7))
+    print(f"{interval:9.1f} {m.frame_completion_rate:11.3f} {m.lp_violated:11d}")
+
+print("\n== Fig 8 / Table II: congestion duty cycles (weighted 4) ==")
+print(f"{'duty':>5s} {'completion':>11s} {'failed':>7s} {'violated':>9s} {'4-core':>7s}")
+for duty in (0.0, 0.25, 0.5, 0.75):
+    m = run_experiment(ExperimentConfig(
+        scheduler="ras", trace="weighted4", n_frames=95,
+        duty_cycle=duty, seed=7))
+    print(f"{duty:5.2f} {m.frame_completion_rate:11.3f} {m.lp_failed:7d} "
+          f"{m.lp_violated:9d} {m.four_core_fraction:7.3f}")

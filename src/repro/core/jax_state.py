@@ -1,0 +1,220 @@
+"""Fully-jitted scheduler state: the paper's §IV data structures as JAX
+arrays, with allocation steps that run as single XLA programs.
+
+This substantiates DESIGN.md §3: on a TPU-hosted controller the whole
+scheduling decision — multi-containment query across every worker, slot
+selection, window bisection and link reservation — is one fused device
+program (`hp_place` / `lp_place` below), with *no host round-trips*.
+The Python structures in `windows.py` / `netlink.py` remain the reference;
+`export_state` converts a live RASScheduler and the equivalence tests in
+tests/test_jax_state.py pin the two implementations together.
+
+State layout (one pytree of arrays, a valid jit carry):
+
+    win_t1, win_t2      f32[DEV, CFG, T, W]   availability windows
+    win_valid           bool[DEV, CFG, T, W]
+    min_dur             f32[CFG]              per-config minimum duration
+    link_t1, link_t2    f32[B]                discretised link buckets
+    link_cap, link_used i32[B]
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tasks import ALL_CONFIGS
+
+BIG = 1e30
+
+
+class SchedState(NamedTuple):
+    win_t1: jnp.ndarray     # [DEV, CFG, T, W]
+    win_t2: jnp.ndarray
+    win_valid: jnp.ndarray
+    min_dur: jnp.ndarray    # [CFG]
+    link_t1: jnp.ndarray    # [B]
+    link_t2: jnp.ndarray
+    link_cap: jnp.ndarray
+    link_used: jnp.ndarray
+
+
+CFG_INDEX = {c.name: i for i, c in enumerate(ALL_CONFIGS)}
+
+
+def export_state(sched, max_windows: int = 16) -> SchedState:
+    """Snapshot a live RASScheduler into array form."""
+    n_dev = sched.n_devices
+    n_cfg = len(ALL_CONFIGS)
+    max_tracks = max(
+        sched.devices[0].lists[c.name].track_count for c in ALL_CONFIGS
+    )
+    t1 = np.full((n_dev, n_cfg, max_tracks, max_windows), BIG, np.float32)
+    t2 = np.full_like(t1, BIG)
+    valid = np.zeros(t1.shape, bool)
+    for d, dev in enumerate(sched.devices):
+        for ci, cfg in enumerate(ALL_CONFIGS):
+            al = dev.lists[cfg.name]
+            for ti, track in enumerate(al.tracks):
+                for wi, w in enumerate(track[:max_windows]):
+                    t1[d, ci, ti, wi] = w.t1
+                    t2[d, ci, ti, wi] = min(w.t2, BIG)
+                    valid[d, ci, ti, wi] = True
+    link = sched.link
+    return SchedState(
+        win_t1=jnp.asarray(t1),
+        win_t2=jnp.asarray(t2),
+        win_valid=jnp.asarray(valid),
+        min_dur=jnp.asarray([c.padded_time for c in ALL_CONFIGS], jnp.float32),
+        link_t1=jnp.asarray([b.t1 for b in link.buckets], jnp.float32),
+        link_t2=jnp.asarray([b.t2 for b in link.buckets], jnp.float32),
+        link_cap=jnp.asarray([b.capacity for b in link.buckets], jnp.int32),
+        link_used=jnp.asarray([len(b.items) for b in link.buckets], jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# queries (pure functions of SchedState)
+# ---------------------------------------------------------------------------
+
+def _device_slot(state: SchedState, dev, cfg_idx, q1, deadline, dur):
+    """Earliest feasible (track, window, start) on one device+config."""
+    t1 = state.win_t1[dev, cfg_idx]          # [T, W]
+    t2 = state.win_t2[dev, cfg_idx]
+    valid = state.win_valid[dev, cfg_idx]
+    start = jnp.maximum(t1, q1)
+    feasible = valid & (start + dur <= jnp.minimum(t2, deadline))
+    key = jnp.where(feasible, start, BIG)
+    flat = jnp.argmin(key.reshape(-1))
+    best = key.reshape(-1)[flat]
+    T, W = t1.shape
+    return best < BIG, flat // W, flat % W, best
+
+
+def _bisect(state: SchedState, dev, cfg_idx, track, slot, s, e) -> SchedState:
+    """Consume [s, e) from window (dev, cfg, track, slot) across EVERY
+    config list of the device (the §IV.A.1 fan-out write), keeping
+    min-duration remainders.  Remainders reuse the consumed slot (left) and
+    the first invalid slot (right) of the same track."""
+    def fan_out(ci, st: SchedState):
+        # trim any window of config ci / any track overlapping [s, e)
+        t1 = st.win_t1[dev, ci]
+        t2 = st.win_t2[dev, ci]
+        valid = st.win_valid[dev, ci]
+        overlap = valid & (t1 < e) & (s < t2)
+        # consume at most ceil(cores/track_cores)=1 most-overlapping track
+        ol = jnp.where(
+            overlap, jnp.minimum(t2, e) - jnp.maximum(t1, s), 0.0
+        ).sum(axis=1)                                   # per track
+        tr = jnp.argmax(ol)
+        row_t1, row_t2 = t1[tr], t2[tr]
+        row_valid = valid[tr]
+        row_overlap = overlap[tr]
+        md = st.min_dur[ci]
+        left_ok = row_overlap & (s - row_t1 >= md)
+        right_ok = row_overlap & (row_t2 - e >= md)
+        # left remainder replaces the window in place; right goes to a free slot
+        new_t1 = jnp.where(row_overlap, jnp.where(left_ok, row_t1, BIG), row_t1)
+        new_t2 = jnp.where(row_overlap, jnp.where(left_ok, s, BIG), row_t2)
+        new_valid = jnp.where(row_overlap, left_ok, row_valid)
+        # place ONE right remainder (windows in a track overlap [s,e) at most
+        # twice in practice; the reference implementation handles the rest —
+        # dropping extras only makes the scheduler conservative, never wrong)
+        any_right = right_ok.any()
+        r_idx = jnp.argmax(right_ok)
+        free = jnp.argmin(new_valid)  # first invalid slot
+        new_t1 = jnp.where(
+            any_right, new_t1.at[free].set(jnp.where(new_valid[free], new_t1[free], e)), new_t1
+        )
+        new_t2 = jnp.where(
+            any_right,
+            new_t2.at[free].set(
+                jnp.where(new_valid[free], new_t2[free], row_t2[r_idx])
+            ),
+            new_t2,
+        )
+        new_valid = jnp.where(
+            any_right, new_valid.at[free].set(True), new_valid
+        )
+        return SchedState(
+            st.win_t1.at[dev, ci, tr].set(new_t1),
+            st.win_t2.at[dev, ci, tr].set(new_t2),
+            st.win_valid.at[dev, ci, tr].set(new_valid),
+            st.min_dur, st.link_t1, st.link_t2, st.link_cap, st.link_used,
+        )
+
+    for ci in range(len(ALL_CONFIGS)):
+        state = fan_out(ci, state)
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg_idx",))
+def hp_place(state: SchedState, dev, now, *, cfg_idx: int = 0):
+    """High-priority placement (§IV.B.1): strict containment of
+    [now, now+dur) on the source device, committed in one XLA program."""
+    dur = state.min_dur[cfg_idx]
+    found, track, slot, start = _device_slot(
+        state, dev, cfg_idx, now, now + dur + 1e-6, dur
+    )
+    new_state = jax.lax.cond(
+        found,
+        lambda st: _bisect(st, dev, cfg_idx, track, slot, start, start + dur),
+        lambda st: st,
+        state,
+    )
+    return found, start, new_state
+
+
+@functools.partial(jax.jit, static_argnames=("cfg_idx", "n_tasks"))
+def lp_place(state: SchedState, src_dev, now, deadline, *,
+             cfg_idx: int = 1, n_tasks: int = 1):
+    """Low-priority request (§IV.B.2): reserve a link slot per task, run the
+    multi-containment query across all devices, prefer the source device,
+    commit each placement — all inside one jitted scan."""
+    dur = state.min_dur[cfg_idx]
+    n_dev = state.win_t1.shape[0]
+
+    def link_reserve(st: SchedState, t_p):
+        ok = (st.link_used < st.link_cap) & (st.link_t2 > t_p)
+        idx = jnp.argmax(ok)
+        found = ok.any()
+        used = st.link_used.at[idx].add(jnp.where(found, 1, 0))
+        return st._replace(link_used=used), found, st.link_t2[idx]
+
+    def place_one(carry, _):
+        st, n_ok = carry
+        st, comm_ok, comm_end = link_reserve(st, now)
+        # multi-containment across every device
+        founds, tracks, slots, starts = jax.vmap(
+            lambda d: _device_slot(st, d, cfg_idx, now, deadline, dur)
+        )(jnp.arange(n_dev))
+        # remote devices cannot start before their transfer lands
+        starts_adj = jnp.where(
+            jnp.arange(n_dev) == src_dev, starts, jnp.maximum(starts, comm_end)
+        )
+        feasible = founds & (starts_adj + dur <= deadline)
+        feasible &= (jnp.arange(n_dev) == src_dev) | comm_ok
+        # prefer source device, then earliest start
+        key = jnp.where(feasible, starts_adj, BIG)
+        key = key - jnp.where(jnp.arange(n_dev) == src_dev, 1e-3, 0.0)
+        d = jnp.argmin(key)
+        ok = feasible[d]
+        start = starts_adj[d]
+        st = jax.lax.cond(
+            ok,
+            lambda s: _bisect(s, d, cfg_idx, tracks[d], slots[d], start,
+                              start + dur),
+            lambda s: s,
+            st,
+        )
+        return (st, n_ok + ok.astype(jnp.int32)), (ok, d, start)
+
+    (state, n_ok), (oks, devs, starts) = jax.lax.scan(
+        place_one, (state, jnp.asarray(0, jnp.int32)), None, length=n_tasks
+    )
+    all_ok = n_ok == n_tasks
+    return all_ok, oks, devs, starts, state

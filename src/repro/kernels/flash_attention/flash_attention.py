@@ -1,0 +1,153 @@
+"""Blocked flash attention for TPU (pl.pallas_call + BlockSpec).
+
+Online-softmax attention tiled through VMEM:
+
+    grid = (batch, q_heads, n_q_blocks, n_k_blocks)
+
+The last grid dimension is sequential on TPU, so the running max ``m``,
+normaliser ``l`` and accumulator ``acc`` live in VMEM scratch and carry
+across k-blocks; the output block is written on the final k-step.
+
+Features needed by the assigned architectures: causal masking, sliding
+windows (gemma2 local layers), attention-logit soft-capping (gemma2) and
+GQA (the kv-head block index maps q-head ``h`` to ``h // group``).
+
+Block shapes default to (128, head_dim): the q/k tiles hit the MXU at its
+native 128 width, and the VMEM working set is
+  bq·hd (q) + bk·hd (k,v) + bq·bk (scores) + bq·hd (acc)  ≈ 0.4 MB
+at (128, 128) in fp32 — far under the ~16 MB/core budget, leaving room
+for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref,              # VMEM blocks
+    o_ref,                            # output block
+    m_scratch, l_scratch, acc_scratch,  # carried across k-blocks
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    softcap: float,
+    block_q: int,
+    block_k: int,
+    n_k_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)          # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                     # [bq, bk]
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scratch[...]                       # [bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                        # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)               # [bq, 1]
+    l_new = alpha * l_scratch[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scratch[...] = m_new
+    l_scratch[...] = l_new
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scratch[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_scratch[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "block_q", "block_k", "interpret"
+    ),
+)
+def flash_attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: int = 0,            # 0 = no sliding window
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """q: [B,H,S,hd]; k, v: [B,K,S,hd] (K divides H) -> [B,H,S,hd]."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    assert H % K == 0, "GQA requires H % K == 0"
+    group = H // K
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    nq, nk = S // block_q, S // block_k
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        block_q=block_q,
+        block_k=block_k,
+        n_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, hd), lambda b, h, iq, ik: (b, h // group, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, hd), lambda b, h, iq, ik: (b, h // group, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, hd), lambda b, h, iq, ik: (b, h, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

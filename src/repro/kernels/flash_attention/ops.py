@@ -1,0 +1,33 @@
+"""Dispatching wrapper: Pallas kernel on TPU, jnp oracle elsewhere.
+
+The model code calls :func:`attention_op`; on a TPU backend it runs the
+blocked VMEM kernel, on CPU (this container) it runs the reference (the
+kernel itself is still validated on CPU via ``interpret=True`` in the
+tests).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention_op(q, k, v, *, causal=True, window=0, softcap=0.0,
+                 block_q=128, block_k=128, force_kernel=False,
+                 interpret=False):
+    use_kernel = force_kernel or on_tpu()
+    S = q.shape[2]
+    if use_kernel and S % min(block_q, S) == 0:
+        return flash_attention(
+            q, k, v,
+            causal=causal, window=window, softcap=softcap,
+            block_q=block_q, block_k=block_k,
+            interpret=interpret or not on_tpu(),
+        )
+    return attention_ref(q, k, v, causal=causal, window=window, softcap=softcap)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: [B,H,S,hd]; k,v: [B,K,S,hd] -> [B,H,S,hd].  Materialises the full
+    score matrix — the correctness oracle the kernel must match."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    group = H // K
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s *= hd ** -0.5
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qp >= kp
+    if window > 0:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)

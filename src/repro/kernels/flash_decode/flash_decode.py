@@ -1,0 +1,121 @@
+"""Flash-decode attention for TPU: ONE query token vs a long KV cache.
+
+The decode hot path (decode_32k / long_500k) is memory-bound: the whole
+cost is streaming the cache through VMEM once.  Layout:
+
+    grid = (batch, kv_heads, n_s_blocks)      # s sequential (last dim)
+
+Per (b, kv-head) the q-group slice [G, hd] stays resident; each grid step
+streams one cache block [block_s, hd] of k and v, updates the online-
+softmax running (m, l, acc) in VMEM scratch, masks positions beyond the
+current write index ``pos`` (prefetched scalar), and writes the output on
+the final block.  HBM traffic = exactly one cache read — the roofline
+floor for decode.
+
+VMEM at (block_s=512, hd=128, G=8): k+v 0.5 MB, acc ~4 KB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, block_s: int, n_blocks: int,
+                   softcap: float, window: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [G, hd]
+    k = k_ref[0, 0].astype(jnp.float32)          # [block_s, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                     # [G, block_s]
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+
+    pos = pos_ref[b]
+    k_idx = i * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = k_idx <= pos
+    if window > 0:
+        ok &= (pos - k_idx) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(i == n_blocks - 1)
+    def _fin():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("softcap", "window", "block_s", "interpret"),
+)
+def flash_decode(q, k_cache, v_cache, pos, *, softcap: float = 0.0,
+                 window: int = 0, block_s: int = 512,
+                 interpret: bool = False):
+    """q: [B,H,hd] (one token); k_cache/v_cache: [B,K,S,hd];
+    pos: [B] int32 current index (attend to cache[: pos+1]).
+    Returns [B,H,hd]."""
+    B, H, hd = q.shape
+    K, S = k_cache.shape[1], k_cache.shape[2]
+    assert H % K == 0
+    G = H // K
+    block_s = min(block_s, S)
+    assert S % block_s == 0
+    n_blocks = S // block_s
+    qg = q.reshape(B, K, G, hd)
+
+    kernel = functools.partial(
+        _decode_kernel,
+        scale=hd ** -0.5,
+        block_s=block_s,
+        n_blocks=n_blocks,
+        softcap=softcap,
+        window=window,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, K, n_blocks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # pos, scalar-prefetched
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_s, hd), lambda b, h, i: (b, h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, i: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, qg, k_cache, v_cache)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,25 @@
+"""Dispatching wrapper for flash-decode."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_decode.flash_decode import flash_decode
+from repro.kernels.flash_decode.ref import decode_attention_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention_op(q, k_cache, v_cache, pos, *, softcap=0.0, window=0,
+                        block_s=512, force_kernel=False, interpret=False):
+    S = k_cache.shape[2]
+    if (force_kernel or on_tpu()) and S % min(block_s, S) == 0:
+        return flash_decode(
+            q, k_cache, v_cache, pos,
+            softcap=softcap, window=window, block_s=block_s,
+            interpret=interpret or not on_tpu(),
+        )
+    return decode_attention_ref(q, k_cache, v_cache, pos,
+                                softcap=softcap, window=window)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, *, softcap=0.0, window=0):
+    """q: [B,H,hd]; caches: [B,K,S,hd]; pos: [B] -> [B,H,hd]."""
+    B, H, hd = q.shape
+    K, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    k = jnp.repeat(k_cache, G, axis=1)  # [B,H,S,hd]
+    v = jnp.repeat(v_cache, G, axis=1)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), k.astype(jnp.float32))
+    s *= hd ** -0.5
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    idx = jnp.arange(S)[None, None, :]
+    ok = idx <= pos[:, None, None]
+    if window > 0:
+        ok &= (pos[:, None, None] - idx) < window
+    s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", w, v.astype(jnp.float32)).astype(q.dtype)

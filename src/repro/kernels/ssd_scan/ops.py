@@ -1,0 +1,24 @@
+"""Dispatching wrapper for the SSD scan."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd_scan_op(x, dt, A, B, C, *, block_h=8, chunk=128,
+                force_kernel=False, interpret=False):
+    S, H = x.shape[1], x.shape[2]
+    aligned = S % min(chunk, S) == 0 and H % min(block_h, H) == 0
+    if (force_kernel or on_tpu()) and aligned:
+        return ssd_scan(
+            x, dt, A, B, C, block_h=block_h, chunk=chunk,
+            interpret=interpret or not on_tpu(),
+        )
+    return ssd_scan_ref(x, dt, A, B, C)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SSD kernel: exact sequential recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """x: [B,S,H,P]; dt: [B,S,H]; A: [H]; B, C: [B,S,N] -> [B,S,H,P].
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t · h_t
+    """
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, xs):
+        x_t, dt_t, B_t, C_t = xs               # [B,H,P], [B,H], [B,N], [B,N]
+        a = jnp.exp(dt_t * A[None, :])          # [B,H]
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt_t, B_t, x_t)
+        h = a[:, :, None, None] * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(C.astype(jnp.float32), 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

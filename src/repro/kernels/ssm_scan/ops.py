@@ -1,0 +1,25 @@
+"""Dispatching wrapper for the selective scan."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.kernels.ssm_scan.ssm_scan import ssm_scan
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssm_scan_op(u, dt, A, B, C, *, block_d=256, chunk=128,
+                force_kernel=False, interpret=False):
+    S, di = u.shape[1], u.shape[2]
+    aligned = S % min(chunk, S) == 0 and di % min(block_d, di) == 0
+    if (force_kernel or on_tpu()) and aligned:
+        return ssm_scan(
+            u, dt, A, B, C,
+            block_d=block_d, chunk=chunk,
+            interpret=interpret or not on_tpu(),
+        )
+    return ssm_scan_ref(u, dt, A, B, C)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the selective-scan kernel: the exact sequential
+recurrence (lax.scan over time steps)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(u, dt, A, B, C):
+    """u, dt: [B,S,di]; A: [di,N]; B, C: [B,S,N] -> y [B,S,di]."""
+    Bsz, S, di = u.shape
+    N = A.shape[-1]
+
+    def step(h, xs):
+        u_t, dt_t, B_t, C_t = xs
+        a = jnp.exp(dt_t[..., None] * A[None])            # [B,di,N]
+        b = (dt_t * u_t)[..., None] * B_t[:, None, :]
+        h = a * h + b
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, di, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(u.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(C.astype(jnp.float32), 1, 0),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(u.dtype)

@@ -1,0 +1,22 @@
+"""Dispatching wrapper for the fleet-scale window query."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.window_query.ref import window_query_ref
+from repro.kernels.window_query.window_query import window_query
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def window_query_op(t1, t2, valid, q1, deadline, dur, *, force_kernel=False,
+                    interpret=False):
+    if force_kernel or on_tpu():
+        return window_query(
+            t1, t2, valid, q1, deadline, dur,
+            interpret=interpret or not on_tpu(),
+        )
+    return window_query_ref(t1, t2, valid, q1, deadline, dur)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the window-query kernel (mirrors
+repro.core.windows.find_slot_arrays, vmapped over devices)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = 3.0e38
+
+
+def window_query_ref(t1, t2, valid, q1, deadline, dur):
+    """t1,t2,valid: [Dev,T,W] -> (found [Dev] i32, start [Dev] f32)."""
+    start = jnp.maximum(t1, q1)
+    feasible = valid.astype(bool) & (start + dur <= jnp.minimum(t2, deadline))
+    key = jnp.where(feasible, start, BIG).reshape(t1.shape[0], -1)
+    best = jnp.min(key, axis=1)
+    return (best < BIG).astype(jnp.int32), best

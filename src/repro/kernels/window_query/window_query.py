@@ -1,0 +1,84 @@
+"""Fleet-scale multi-containment window query (pl.pallas_call + BlockSpec).
+
+The paper's §IV.B.2 query — "first availability window on each device that
+can host a ``dur``-second slot inside ``[q1, deadline]``" — as a TPU
+kernel.  On an RPi controller this is a per-device early-exit scan; at
+fleet scale (thousands of workers × tracks × windows held by a TPU-hosted
+controller) the whole query is one VPU pass:
+
+    grid = (device blocks,)
+    block: t1/t2/valid [block_dev, T·W]  (tracks×windows pre-flattened)
+
+Each block computes  start = max(t1, q1),  feasible = valid ∧ (start+dur ≤
+min(t2, deadline)),  then a masked min-reduce over the window axis gives
+the earliest feasible start per device.  "Early exit" is meaningless on
+SIMD hardware — the reduction IS the query (DESIGN.md §3).
+
+VMEM: 3 · block_dev · T·W · 4 B ≈ 0.8 MB at (256 devices, 256 windows).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.0e38
+
+
+def _query_kernel(t1_ref, t2_ref, valid_ref, start_ref, found_ref, *,
+                  q1: float, deadline: float, dur: float):
+    t1 = t1_ref[...]                        # [bd, TW]
+    t2 = t2_ref[...]
+    valid = valid_ref[...]
+    start = jnp.maximum(t1, q1)
+    feasible = (valid != 0) & (start + dur <= jnp.minimum(t2, deadline))
+    key = jnp.where(feasible, start, BIG)
+    best = jnp.min(key, axis=1)             # [bd]
+    start_ref[...] = best
+    found_ref[...] = (best < BIG).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("q1", "deadline", "dur", "block_dev", "interpret")
+)
+def window_query(t1, t2, valid, q1, deadline, dur, *, block_dev: int = 256,
+                 interpret: bool = False):
+    """t1,t2: [Dev, T, W] f32; valid: [Dev, T, W] (bool/int) ->
+    (found [Dev] i32, start [Dev] f32)."""
+    Dev, T, W = t1.shape
+    t1f = t1.reshape(Dev, T * W)
+    t2f = t2.reshape(Dev, T * W)
+    vf = valid.reshape(Dev, T * W).astype(jnp.int32)
+    block_dev = min(block_dev, Dev)
+    pad = (-Dev) % block_dev
+    if pad:
+        t1f = jnp.pad(t1f, ((0, pad), (0, 0)), constant_values=BIG)
+        t2f = jnp.pad(t2f, ((0, pad), (0, 0)), constant_values=-BIG)
+        vf = jnp.pad(vf, ((0, pad), (0, 0)))
+    n = t1f.shape[0] // block_dev
+
+    kernel = functools.partial(
+        _query_kernel, q1=float(q1), deadline=float(deadline), dur=float(dur)
+    )
+    start, found = pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((block_dev, T * W), lambda i: (i, 0)),
+            pl.BlockSpec((block_dev, T * W), lambda i: (i, 0)),
+            pl.BlockSpec((block_dev, T * W), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_dev,), lambda i: (i,)),
+            pl.BlockSpec((block_dev,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t1f.shape[0],), jnp.float32),
+            jax.ShapeDtypeStruct((t1f.shape[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(t1f, t2f, vf)
+    return found[:Dev], start[:Dev]

@@ -1,0 +1,242 @@
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture × input shape) against the
+production mesh — 16×16 = 256 chips single-pod, (2,16,16) = 512 chips
+multi-pod — using ShapeDtypeStruct inputs (no allocation), then records
+``memory_analysis()`` / ``cost_analysis()`` / parsed collective bytes for
+the §Roofline tables.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+        --shape train_4k [--multi-pod] [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+# The placeholder-device flag MUST precede any jax import (jax locks the
+# device count on first init).  Set here and ONLY here — smoke tests and
+# benches must keep seeing one real CPU device.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.data.pipeline import make_batch_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (
+    batch_shardings,
+    configure_attention_sharding,
+    configure_moe_sharding,
+    decode_state_shardings,
+    moment_shardings,
+    param_shardings,
+    pick_strategy,
+    replicated,
+)
+from repro.models.config import ALL_SHAPES, InputShape, ModelConfig
+from repro.models.transformer import Model
+from repro.optim.adamw import AdamWConfig, OptState, adamw_init, adamw_update
+from repro.roofline.hlo import roofline_terms
+from repro.roofline.hlo_graph import analyze
+
+DRY_ARCHS = tuple(a for a in ARCHS if a != "waste-pipeline")
+
+
+def _tree_bytes(tree) -> float:
+    import numpy as np
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return float(total)
+
+
+def _shape_by_name(name: str) -> InputShape:
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def build_train(cfg: ModelConfig, shape: InputShape, mesh):
+    model = Model(cfg)
+    opt_cfg = AdamWConfig(total_steps=1000)
+
+    def train_step(params, opt, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt, info = adamw_update(opt_cfg, grads, opt, params)
+        return params, opt, loss
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt_shape = jax.eval_shape(adamw_init, params_shape)
+    strategy = pick_strategy(cfg, shape.kind)
+    p_sh = param_shardings(mesh, cfg, params_shape, phase="train",
+                           strategy=strategy)
+    m_sh = moment_shardings(mesh, params_shape, strategy, p_sh)
+    o_sh = OptState(step=replicated(mesh), mu=m_sh, nu=m_sh)
+    b_specs = make_batch_specs(cfg, shape)
+    b_sh = batch_shardings(mesh, cfg, shape, b_specs, strategy=strategy)
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, replicated(mesh)),
+    )
+    return jitted, (params_shape, opt_shape, b_specs)
+
+
+def build_prefill(cfg: ModelConfig, shape: InputShape, mesh):
+    model = Model(cfg)
+
+    def prefill(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = param_shardings(mesh, cfg, params_shape, phase="prefill")
+    b_specs = make_batch_specs(cfg, shape)
+    b_sh = batch_shardings(mesh, cfg, shape, b_specs)
+    jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+    return jitted, (params_shape, b_specs)
+
+
+def build_decode(cfg: ModelConfig, shape: InputShape, mesh):
+    model = Model(cfg)
+
+    def serve_step(params, state, tokens):
+        return model.decode_step(params, state, tokens)
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = param_shardings(mesh, cfg, params_shape, phase="decode")
+    state_shape = jax.eval_shape(
+        lambda: model.init_decode_state(shape.global_batch, shape.seq_len)
+    )
+    s_sh = decode_state_shardings(mesh, cfg, shape, state_shape)
+    tok_spec = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    t_sh = batch_shardings(mesh, cfg, shape, {"t": tok_spec})["t"]
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(p_sh, s_sh, t_sh),
+        out_shardings=(None, s_sh),
+    )
+    return jitted, (params_shape, state_shape, tok_spec)
+
+
+def build(cfg: ModelConfig, shape: InputShape, mesh):
+    configure_attention_sharding(mesh, cfg, shape.kind)
+    configure_moe_sharding(mesh, cfg)
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh)
+    return build_decode(cfg, shape, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run driver
+# ---------------------------------------------------------------------------
+
+def dry_run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+                out_dir: str = "results/dryrun", verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = _shape_by_name(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = len(mesh.devices.flatten())
+    t0 = time.time()
+    with mesh:
+        jitted, abstract_args = build(cfg, shape, mesh)
+        lowered = jitted.lower(*abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    analysis = analyze(compiled.as_text())
+    arg_bytes_global = _tree_bytes(abstract_args)
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "hlo_flops_raw_per_chip": float(cost.get("flops", -1) or -1),
+        "hlo_bytes_raw_per_chip": float(cost.get("bytes accessed", -1) or -1),
+        "collectives": analysis["collectives_weighted"],
+        "arg_bytes_global": arg_bytes_global,
+        "memory": {
+            k: int(getattr(mem, k, 0) or 0)
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+        },
+    }
+    record["roofline"] = roofline_terms(cfg, shape, n_chips, analysis,
+                                        arg_bytes_global)
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{record['mesh']}"
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(record, f, indent=1)
+    if verbose:
+        r = record["roofline"]
+        print(
+            f"[dryrun] {tag}: compile={record['compile_s']:.1f}s "
+            f"flops/chip={r['hlo_flops_per_chip']:.3e} "
+            f"compute={r['compute_s']:.2e}s memory={r['memory_s']:.2e}s "
+            f"collective={r['collective_s']:.2e}s -> {r['bottleneck']} "
+            f"useful={r['useful_flops_ratio']:.2f}"
+        )
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all (arch x shape) single-pod baselines")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = []
+        for arch in DRY_ARCHS:
+            for shape in ALL_SHAPES:
+                try:
+                    dry_run_one(arch, shape.name, multi_pod=args.multi_pod,
+                                out_dir=args.out)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape.name, repr(e)))
+                    traceback.print_exc()
+        if failures:
+            print("FAILURES:", failures)
+            raise SystemExit(1)
+        print(f"all {len(DRY_ARCHS) * len(ALL_SHAPES)} combos lowered+compiled OK")
+        return
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    rec = dry_run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                      out_dir=args.out)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

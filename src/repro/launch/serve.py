@@ -1,0 +1,69 @@
+"""Serving driver: deadline-constrained batched serving of the waste
+pipeline (or any arch's reduced variant) through the RAS scheduler.
+
+    PYTHONPATH=src python -m repro.launch.serve --frames 40 --scheduler ras
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.serving.engine import ServingEngine
+from repro.sim.traces import generate_trace
+
+
+def serve(
+    arch: str = "waste-pipeline",
+    frames: int = 40,
+    n_workers: int = 4,
+    scheduler: str = "ras",
+    trace: str = "weighted2",
+    seed: int = 0,
+) -> dict:
+    cfg = get_config(arch)
+    if arch != "waste-pipeline":
+        cfg = reduced(cfg)
+    eng = ServingEngine(cfg, n_workers=n_workers, scheduler=scheduler, seed=seed)
+    tr = generate_trace(trace, frames, n_workers, seed=seed)
+    from repro.core.tasks import FRAME_PERIOD
+
+    fid = 0
+    for f in range(frames):
+        for d in range(n_workers):
+            v = int(tr.entries[f, d])
+            if v < 0:
+                continue
+            eng.submit_frame(fid, d, max(v, 0), now=f * FRAME_PERIOD)
+            fid += 1
+    out = {
+        "arch": arch,
+        "scheduler": scheduler,
+        "frames_submitted": fid,
+        "completion_rate": round(eng.completion_rate(), 4),
+        "stage1_latency_s": round(eng.stage1.latency, 4),
+        "stage3_latency_s": round(eng.stage3.latency, 4),
+        "offloaded_total": sum(r.offloaded for r in eng.results),
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="waste-pipeline")
+    ap.add_argument("--frames", type=int, default=40)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--scheduler", default="ras", choices=["ras", "wps"])
+    ap.add_argument("--trace", default="weighted2")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out = serve(args.arch, args.frames, args.workers, args.scheduler,
+                args.trace, args.seed)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

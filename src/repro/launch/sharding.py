@@ -1,0 +1,328 @@
+"""Sharding rules: logical param/activation/cache layouts -> PartitionSpec.
+
+Scheme (megatron-style tensor parallel over ``model``, batch over
+``('pod','data')``):
+
+- attention:  wq/wk/wv column-parallel on the head axis, wo row-parallel;
+  when an arch's kv-head count doesn't divide the model axis (qwen2.5 has
+  2 kv heads on a 16-way axis) the *head_dim* axis is sharded instead —
+  ``_fit`` picks the first dividing axis from each rule's candidates.
+- MLP: wg/wu column-parallel on d_ff, wd row-parallel.
+- MoE: experts sharded over ``model`` (expert parallelism); for >100B
+  models the per-expert FFN dim is additionally sharded over ``data``
+  (FSDP-flavoured, keeps kimi-k2's 1T params + fp32 moments per-chip sane).
+- SSM: everything column-parallel on d_inner.
+- caches: batch over data axes; kv-heads (or head_dim) over ``model``;
+  ``long_500k`` (batch=1) shards the *sequence* axis of the cache instead.
+
+Rules match on the trailing path component; stacked layer axes (leading
+``L`` or ``[G, g]``) are padded with None automatically by matching specs
+right-aligned against the leaf rank.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+from repro.models.config import InputShape, ModelConfig
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([_axis_size(mesh, a) for a in axis]))
+    return mesh.shape[axis] if axis in mesh.axis_names else 1
+
+
+def _fit(mesh: Mesh, dim: int, *candidates):
+    """First candidate axis that exists in the mesh and divides dim."""
+    for c in candidates:
+        if c is None:
+            return None
+        sz = _axis_size(mesh, c)
+        if sz > 1 and dim % sz == 0:
+            return c
+    return None
+
+
+def _rule(mesh: Mesh, name: str, shape: tuple, fsdp: bool,
+          in_moe: bool = False, phase: str = "train"):
+    """Right-aligned PartitionSpec entries for the *trailing* dims."""
+    d = shape  # convenience
+    n = len(shape)
+    M, D_ = "model", "data"
+
+    def last(k):  # the k trailing dims
+        return d[n - k:]
+
+    if name in ("embed",):
+        V, Dm = last(2)
+        return [_fit(mesh, V, M), None]
+    if name in ("unembed",):
+        Dm, V = last(2)
+        return [None, _fit(mesh, V, M)]
+    # Attention fallback policy when the head count doesn't divide the
+    # model axis (qwen's 2 kv heads, gemma2's 8 q heads on a 16-way axis):
+    # REPLICATE the attention weights in every phase.
+    #  - train/prefill: an hd-sharded contraction would all-reduce the S x S
+    #    score tensor every layer (~TB/step measured) — redundant attention
+    #    compute on the batch shard is far cheaper (see EXPERIMENTS §Perf).
+    #  - decode: hd-sharding made GSPMD fall into "involuntary full
+    #    rematerialization" and all-gather the entire 77 GB KV cache in f32
+    #    every token (measured 10.6 GB wire/chip/step).  Instead the CACHE
+    #    shards its sequence axis over 'model' (decode_state_shardings) and
+    #    the small attention weights stay replicated.
+    if name in ("wq", "wk", "wv"):
+        Dm, H, hd = last(3)
+        return [None, _fit(mesh, H, M), None]
+    if name in ("bq", "bk", "bv"):
+        H, hd = last(2)
+        return [_fit(mesh, H, M), None]
+    if name == "wo":
+        H, hd, Dm = last(3)
+        return [_fit(mesh, H, M), None, None]
+    if name in ("wq_a",):
+        return [None, _fit(mesh, last(1)[0], M)]
+    if name in ("wq_b", "wkv_b"):
+        r, H, k = last(3)
+        return [None, _fit(mesh, H, M), None]
+    if name in ("wkv_a",):
+        return [None, None]
+    if name in ("wg", "wu"):
+        if in_moe and n >= 3:
+            E, Dm, F = last(3)
+            return [
+                _fit(mesh, E, M),
+                None,
+                _fit(mesh, F, D_) if fsdp else None,
+            ]
+        Dm, F = last(2)
+        return [None, _fit(mesh, F, M)]
+    if name == "wd":
+        if in_moe and n >= 3:
+            E, F, Dm = last(3)
+            return [
+                _fit(mesh, E, M),
+                _fit(mesh, F, D_) if fsdp else None,
+                None,
+            ]
+        F, Dm = last(2)
+        return [_fit(mesh, F, M), None]
+    if name == "router":
+        return [None, None]
+    if name in ("in_proj",):
+        Dm, E2 = last(2)
+        return [None, _fit(mesh, E2, M)]
+    if name in ("conv_w",):
+        K, di = last(2)
+        return [None, _fit(mesh, di, M)]
+    if name in ("conv_b", "dt_bias", "D", "D_head", "norm_scale"):
+        (c,) = last(1)
+        return [_fit(mesh, c, M)]
+    if name in ("x_dbc", "x_bcdt", "A_log"):
+        if n >= 2:
+            a, b = last(2)
+            return [_fit(mesh, a, M), None]
+        return [_fit(mesh, last(1)[0], M)]
+    if name in ("dt_proj",):
+        R, di = last(2)
+        return [None, _fit(mesh, di, M)]
+    if name in ("out_proj",):
+        di, Dm = last(2)
+        return [_fit(mesh, di, M), None]
+    # norms & anything small: replicate
+    return [None] * min(n, 1)
+
+
+def param_shardings(mesh: Mesh, cfg: ModelConfig, params_shape,
+                    phase: str = "train", strategy: str = "tp") -> dict:
+    """Pytree of NamedSharding matching ``params_shape`` (a tree of
+    ShapeDtypeStruct from ``jax.eval_shape``).
+
+    strategy "tp" (default): megatron tensor/expert parallel over 'model'.
+    strategy "dp_zero1": pure data parallelism using BOTH mesh axes as
+    batch — params replicated, per-layer collectives vanish; pair with
+    :func:`moment_shardings` (ZeRO-1) so optimizer state still fits.
+    Wins for small-dense models (§Perf H3: gemma2 2.6B, 4.6× step-time).
+    """
+    if strategy == "dp_zero1":
+        return jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), params_shape
+        )
+    fsdp = cfg.param_count() > 100e9
+
+    def one(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = next((k for k in reversed(keys) if not k.isdigit()), "")
+        # expert weights sit under .../moe/{wg,wu,wd}; the shared expert
+        # (.../moe/shared/...) is a plain dense MLP.
+        in_moe = "moe" in keys and "shared" not in keys
+        trailing = _rule(mesh, name, leaf.shape, fsdp, in_moe, phase)
+        spec = [None] * (len(leaf.shape) - len(trailing)) + list(trailing)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def moment_shardings(mesh: Mesh, params_shape, strategy: str,
+                     tp_shardings) -> object:
+    """Optimizer-moment shardings.  For "tp" they mirror the params; for
+    "dp_zero1" each fp32 moment shards its first divisible dim across ALL
+    mesh axes (ZeRO-1: 26 GB of AdamW state -> ~100 MB/chip at 2.6B)."""
+    if strategy != "dp_zero1":
+        return tp_shardings
+    axes = tuple(mesh.axis_names)
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        for i, dim in enumerate(leaf.shape):
+            if dim % total == 0:
+                spec[i] = axes
+                break
+        else:
+            for i, dim in enumerate(leaf.shape):
+                if dim % _axis_size(mesh, "model") == 0 and dim > 1:
+                    spec[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, params_shape)
+
+
+def pick_strategy(cfg: ModelConfig, shape_kind: str) -> str:
+    """Auto strategy: small dense models train fastest pure-DP (§Perf H3);
+    everything else uses tensor/expert parallelism."""
+    if shape_kind == "train" and cfg.param_count() <= 4e9 and not cfg.uses_moe:
+        return "dp_zero1"
+    return "tp"
+
+
+def batch_shardings(mesh: Mesh, cfg: ModelConfig, shape: InputShape,
+                    specs: dict, strategy: str = "tp") -> dict:
+    """Input shardings: batch over the data axes (all axes for dp_zero1;
+    falls back to replication when the batch doesn't divide)."""
+    daxes = tuple(mesh.axis_names) if strategy == "dp_zero1" else data_axes(mesh)
+    dsz = _axis_size(mesh, daxes)
+
+    def one(leaf):
+        dims = list(leaf.shape)
+        spec = [None] * len(dims)
+        if dims and dims[0] % dsz == 0 and dsz > 1:
+            spec[0] = daxes
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, specs)
+
+
+def decode_state_shardings(mesh: Mesh, cfg: ModelConfig, shape: InputShape,
+                           state_shape) -> dict:
+    """KV-cache / SSM-state shardings for serve_step.
+
+    batch divisible  -> batch over data axes, heads (or head_dim) over model
+    batch=1 (500k)   -> cache *sequence* axis over data axes instead.
+    """
+    daxes = data_axes(mesh)
+    dsz = _axis_size(mesh, daxes)
+    B = shape.global_batch
+    batch_ok = B % dsz == 0 and dsz > 1
+
+    def one(path, leaf):
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        dims = leaf.shape
+        spec: list = [None] * len(dims)
+        short = name.split("/")[-1]
+        if short == "pos":
+            return NamedSharding(mesh, P(*spec))
+        # locate the batch axis: first axis equal to B after leading stack dims
+        try:
+            b_idx = next(i for i, s in enumerate(dims) if s == B)
+        except StopIteration:
+            b_idx = None
+        if short in ("k", "v"):
+            # [..., B, S, K, hd]: kv-heads over 'model' when they divide;
+            # otherwise the SEQUENCE axis shards over 'model' (hd-sharding
+            # triggers a full-cache all-gather per step — §Perf H2).
+            s_idx, k_idx = len(dims) - 3, len(dims) - 2
+            ax = _fit(mesh, dims[k_idx], "model")
+            if ax:
+                spec[k_idx] = ax
+            if batch_ok and b_idx is not None:
+                spec[b_idx] = daxes
+                if not ax:
+                    spec[s_idx] = _fit(mesh, dims[s_idx], "model")
+            else:
+                seq_axes = daxes if ax else (*daxes, "model")
+                spec[s_idx] = _fit(mesh, dims[s_idx], seq_axes, daxes)
+        elif short == "ckv":
+            # [L, B, S, r+rh] — compressed latents have no head axis
+            s_idx = len(dims) - 2
+            if batch_ok and b_idx is not None:
+                spec[b_idx] = daxes
+            elif dims[s_idx] % dsz == 0 and dsz > 1:
+                spec[s_idx] = daxes
+        elif short in ("h", "h_tail"):
+            # mamba1 [L,B,di,N] / mamba2 [..,B,H,P,N]
+            if batch_ok and b_idx is not None:
+                spec[b_idx] = daxes
+            tgt = len(dims) - 2 if cfg.mamba_version == 1 else len(dims) - 3
+            spec[tgt] = _fit(mesh, dims[tgt], "model")
+        elif short in ("conv", "conv_tail"):
+            if batch_ok and b_idx is not None:
+                spec[b_idx] = daxes
+            spec[len(dims) - 1] = _fit(mesh, dims[-1], "model")
+        elif short == "memory":
+            if batch_ok and b_idx is not None:
+                spec[b_idx] = daxes
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, state_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def configure_moe_sharding(mesh: Mesh, cfg: ModelConfig) -> None:
+    """GShard-style local dispatch groups: one group per data shard, and
+    the grouped token tensor [G, Tg, D] pinned to P(daxes, None, None) so
+    each group's routing/scatter is shard-local (§Perf H1 iteration 2)."""
+    from repro.models.moe import set_dispatch_groups, set_dispatch_sharding
+
+    daxes = data_axes(mesh)
+    dsz = _axis_size(mesh, daxes)
+    if not cfg.uses_moe or dsz <= 1:
+        set_dispatch_groups(1)
+        set_dispatch_sharding(None, None)
+        return
+    set_dispatch_groups(dsz)
+    set_dispatch_sharding(P(daxes, None, None))
+
+
+def configure_attention_sharding(mesh: Mesh, cfg: ModelConfig,
+                                 phase: str) -> None:
+    """Pick the attention activation layout for (cfg, mesh):
+
+    - heads divide the model axis -> heads sharded (megatron; no hint
+      needed, propagation from the column-parallel wq does it), and
+    - otherwise -> q is *sequence*-sharded over the model axis, which keeps
+      attention FLOPs at 1/chips with only an S-axis re-shard, instead of
+      either all-reducing S×S scores (hd-sharding) or recomputing full
+      attention per model shard (replication).  See EXPERIMENTS.md §Perf.
+    """
+    from repro.models.layers import set_attention_q_sharding
+
+    msz = _axis_size(mesh, "model")
+    heads_ok = cfg.n_heads > 0 and cfg.n_heads % max(msz, 1) == 0
+    if phase == "decode" or heads_ok or cfg.arch_type == "ssm" or msz <= 1:
+        set_attention_q_sharding(None)
+        return
+    set_attention_q_sharding(P(None, "model", None, None))

@@ -1,0 +1,118 @@
+"""Training driver.
+
+On this CPU container it trains reduced/small configs for real (the
+examples train a ~100M model for a few hundred steps); on a TPU fleet the
+same code path pjits over the production mesh via ``--mesh prod``.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b \
+        --reduced --steps 200 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save
+from repro.configs import get_config, reduced
+from repro.data.pipeline import SyntheticCorpus
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.sharding import batch_shardings, param_shardings, replicated
+from repro.models.config import InputShape
+from repro.models.transformer import Model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+def train(
+    arch: str,
+    steps: int = 100,
+    batch: int = 8,
+    seq: int = 128,
+    use_reduced: bool = True,
+    lr: float = 3e-4,
+    seed: int = 0,
+    mesh_kind: str = "host",
+    log_every: int = 10,
+    checkpoint_dir: str | None = None,
+    width_mult: int = 1,
+    config=None,
+) -> list[dict]:
+    cfg = config if config is not None else get_config(arch)
+    if config is not None:
+        use_reduced = False
+    if use_reduced:
+        cfg = reduced(cfg)
+        if width_mult > 1:
+            cfg = dataclasses.replace(
+                cfg,
+                d_model=cfg.d_model * width_mult,
+                d_ff=cfg.d_ff * width_mult if cfg.d_ff else 0,
+                n_layers=cfg.n_layers * 2,
+                vocab_size=cfg.vocab_size * 8,
+            )
+    model = Model(cfg)
+    opt_cfg = AdamWConfig(lr=lr, total_steps=steps, warmup_steps=max(steps // 20, 5))
+
+    mesh = make_host_mesh() if mesh_kind == "host" else make_production_mesh()
+    corpus = SyntheticCorpus(cfg, seq, batch, seed=seed)
+
+    def train_step(params, opt, batch_):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch_)
+        params, opt, info = adamw_update(opt_cfg, grads, opt, params)
+        return params, opt, loss, info["grad_norm"]
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(seed))
+        opt = adamw_init(params)
+        step_fn = jax.jit(train_step)
+
+        history = []
+        t0 = time.time()
+        for step in range(steps):
+            b = {k: jnp.asarray(v) for k, v in corpus.batch(step).items()}
+            params, opt, loss, gnorm = step_fn(params, opt, b)
+            if step % log_every == 0 or step == steps - 1:
+                rec = {
+                    "step": step,
+                    "loss": float(loss),
+                    "grad_norm": float(gnorm),
+                    "elapsed_s": round(time.time() - t0, 1),
+                }
+                history.append(rec)
+                print(f"[train {arch}] {json.dumps(rec)}")
+        if checkpoint_dir:
+            save(checkpoint_dir, params, step=steps,
+                 extra={"arch": arch, "reduced": use_reduced})
+    return history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--width-mult", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+    hist = train(
+        args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+        use_reduced=args.reduced, lr=args.lr, seed=args.seed,
+        checkpoint_dir=args.checkpoint, width_mult=args.width_mult,
+    )
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} ({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""DNN substrate: the models whose tasks the scheduler places."""

@@ -1,0 +1,343 @@
+"""Core transformer layers, pure JAX.
+
+Shapes use the convention  B=batch, S=sequence, D=d_model, H=query heads,
+K=kv heads, h=head_dim.  All einsums keep the head axis explicit so the
+GSPMD partitioner can shard heads over the ``model`` mesh axis.
+
+Attention supports: GQA/MQA, causal masking, sliding windows (per-layer,
+dynamic so a scanned stack can alternate local/global — gemma2), attention
+logit soft-capping (gemma2), cross-attention (enc-dec), and MLA
+(DeepSeek-V2 latent KV compression) in both prefill and single-token decode
+forms with an explicit KV cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Norms & activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap > 0 else x
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, n_heads, head_dim]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                 # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+#: Optional activation-sharding hint, set by the launcher (see
+#: repro.launch.sharding.configure_attention_sharding).  When a config's
+#: head count doesn't divide the model axis (gemma2: 8 heads on 16), the
+#: launcher requests *sequence* sharding of q over the model axis instead —
+#: attention compute then stays 1/chips without all-reducing S×S scores.
+_ATTN_Q_SPEC = None
+
+
+def set_attention_q_sharding(spec) -> None:
+    """spec: jax.sharding.PartitionSpec for q [B, S, H, hd], or None."""
+    global _ATTN_Q_SPEC
+    _ATTN_Q_SPEC = spec
+
+
+def _maybe_constrain_q(q):
+    if _ATTN_Q_SPEC is not None and q.shape[1] > 1:
+        return jax.lax.with_sharding_constraint(q, _ATTN_Q_SPEC)
+    return q
+
+
+def causal_window_mask(q_pos, k_pos, window):
+    """[..., Sq, Sk] additive mask.  window: traced scalar, -1 = global.
+    Keeping it traced lets one scanned layer stack alternate local/global."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = diff >= 0
+    ok &= (window < 0) | (diff < jnp.maximum(window, 1))
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AttnDims:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 1e4
+    attn_softcap: float = 0.0
+
+
+def init_attention(key, d_model, dims: AttnDims, qkv_bias=False, dtype=jnp.bfloat16):
+    H, K, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d_model, H, hd), dtype) * s,
+        "wk": jax.random.normal(k2, (d_model, K, hd), dtype) * s,
+        "wv": jax.random.normal(k3, (d_model, K, hd), dtype) * s,
+        "wo": jax.random.normal(k4, (H, hd, d_model), dtype) * (H * hd) ** -0.5,
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((K, hd), dtype)
+        p["bv"] = jnp.zeros((K, hd), dtype)
+    return p
+
+
+def _qkv(p, x, dims: AttnDims, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, positions, dims.rope_theta)
+    k = apply_rope(k, positions, dims.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, dims: AttnDims):
+    """q: [B,Sq,H,h]; k,v: [B,Sk,K,h]; mask: [B?,Sq,Sk] additive."""
+    H, K = dims.n_heads, dims.n_kv_heads
+    G = H // K
+    B, Sq = q.shape[:2]
+    Sk = k.shape[1]
+    q = q.reshape(B, Sq, K, G, dims.head_dim)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+    scores *= dims.head_dim ** -0.5
+    scores = softcap(scores, dims.attn_softcap)
+    scores = scores + mask[:, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Sq, H, dims.head_dim)
+
+
+def attention(p, x, dims: AttnDims, positions, window=-1):
+    """Full (prefill/train) self-attention with causal+window mask.
+
+    On a TPU backend with a static window the blocked Pallas flash kernel
+    handles the S×S core (VMEM-tiled online softmax); the jnp path is the
+    oracle and the CPU/dynamic-window fallback."""
+    q, k, v = _qkv(p, x, dims, positions)
+    q = _maybe_constrain_q(q)
+    if jax.default_backend() == "tpu" and isinstance(window, int):
+        from repro.kernels.flash_attention.ops import attention_op
+
+        qh = q.transpose(0, 2, 1, 3)  # [B,H,S,hd]
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+        out = attention_op(
+            qh, kh, vh,
+            causal=True,
+            window=max(window, 0),
+            softcap=dims.attn_softcap,
+        ).transpose(0, 2, 1, 3)
+    else:
+        mask = causal_window_mask(positions, positions, window)
+        out = _sdpa(q, k, v, mask, dims)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention_decode(p, x, dims: AttnDims, cache_k, cache_v, pos, window=-1):
+    """One-token decode against a preallocated cache.
+
+    x: [B,1,D]; cache_k/v: [B,S,K,h]; pos: [B] current write index.
+    Returns (out [B,1,D], new_cache_k, new_cache_v).
+    """
+    B, S = cache_k.shape[:2]
+    q, k, v = _qkv(p, x, dims, pos[:, None])
+    cache_k = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
+        cache_k, k, pos
+    )
+    cache_v = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
+        cache_v, v, pos
+    )
+    if jax.default_backend() == "tpu" and isinstance(window, int):
+        # flash-decode kernel: streams the cache through VMEM once
+        from repro.kernels.flash_decode.ops import decode_attention_op
+
+        out = decode_attention_op(
+            q[:, 0],                                  # [B,H,hd]
+            cache_k.transpose(0, 2, 1, 3),            # [B,K,S,hd]
+            cache_v.transpose(0, 2, 1, 3),
+            pos,
+            softcap=dims.attn_softcap,
+            window=max(window, 0),
+        )[:, None]                                     # [B,1,H,hd]
+    else:
+        k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        diff = pos[:, None] - k_pos
+        ok = diff >= 0
+        ok &= (window < 0) | (diff < jnp.maximum(window, 1))
+        mask = jnp.where(ok, 0.0, NEG_INF)[:, :, None].transpose(0, 2, 1)
+        out = _sdpa(q, cache_k, cache_v, mask, dims)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_k, cache_v
+
+
+def cross_attention(p, x, memory, dims: AttnDims):
+    """Decoder->encoder attention (no rope on memory keys, no mask)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
+    B, Sq, Sk = x.shape[0], x.shape[1], memory.shape[1]
+    mask = jnp.zeros((B, Sq, Sk), jnp.float32)
+    out = _sdpa(q, k, v, mask, dims)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V2 multi-head latent attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MLADims:
+    n_heads: int
+    head_dim: int            # per-head nope dim
+    kv_lora_rank: int
+    q_lora_rank: int
+    rope_head_dim: int
+    rope_theta: float = 1e4
+
+
+def init_mla(key, d_model, dims: MLADims, dtype=jnp.bfloat16):
+    H, hd = dims.n_heads, dims.head_dim
+    r, qr, rh = dims.kv_lora_rank, dims.q_lora_rank or d_model, dims.rope_head_dim
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    return {
+        "wq_a": jax.random.normal(ks[0], (d_model, qr), dtype) * s,
+        "wq_b": jax.random.normal(ks[1], (qr, H, hd + rh), dtype) * qr ** -0.5,
+        "wkv_a": jax.random.normal(ks[2], (d_model, r + rh), dtype) * s,
+        "wkv_b": jax.random.normal(ks[3], (r, H, 2 * hd), dtype) * r ** -0.5,
+        "wo": jax.random.normal(ks[4], (H, hd, d_model), dtype) * (H * hd) ** -0.5,
+        "q_norm": jnp.zeros((qr,), dtype),
+        "kv_norm": jnp.zeros((r,), dtype),
+    }
+
+
+def _mla_qkv(p, x, dims: MLADims, positions):
+    hd, rh = dims.head_dim, dims.rope_head_dim
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, dims.rope_theta)
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv, k_rope = ckv[..., : dims.kv_lora_rank], ckv[..., dims.kv_lora_rank:]
+    c_kv = rms_norm(c_kv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, dims.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, mask, dims: MLADims):
+    """Latent-space attention: queries are absorbed into the compressed KV
+    (the memory-bound decode form that makes MLA's cache tiny)."""
+    hd = dims.head_dim
+    wk_b, wv_b = p["wkv_b"][..., :hd], p["wkv_b"][..., hd:]
+    # absorb W^K into q: [B,Sq,H,r]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk_b)
+    scores = jnp.einsum("bshr,btr->bhst", q_lat, c_kv).astype(jnp.float32)
+    scores += jnp.einsum("bshk,btk->bhst", q_rope, k_rope).astype(jnp.float32)
+    scores *= (hd + dims.rope_head_dim) ** -0.5
+    scores += mask[:, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    out_lat = jnp.einsum("bhst,btr->bshr", w, c_kv)
+    out = jnp.einsum("bshr,rhk->bshk", out_lat, wv_b)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_attention(p, x, dims: MLADims, positions):
+    """Full-sequence MLA in the *expanded* form: latents are up-projected to
+    per-head k/v before the S×S contraction.  The absorbed form (decode)
+    contracts q against the r=512 latent per position — ~4× the FLOPs of
+    contracting hd=128 when S is large (measured: deepseek prefill useful
+    ratio 0.18 absorbed → see EXPERIMENTS §Perf H4)."""
+    hd = dims.head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, dims, positions)
+    wk_b, wv_b = p["wkv_b"][..., :hd], p["wkv_b"][..., hd:]
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, wk_b)
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, wv_b)
+    scores = jnp.einsum("bqhk,bshk->bhqs", q_nope, k_nope).astype(jnp.float32)
+    scores += jnp.einsum(
+        "bqhk,bsk->bhqs", q_rope, k_rope
+    ).astype(jnp.float32)
+    scores *= (hd + dims.rope_head_dim) ** -0.5
+    mask = causal_window_mask(positions, positions, -1)
+    scores += mask[:, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshk->bqhk", w, v)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_attention_decode(p, x, dims: MLADims, cache, pos):
+    """cache: [B, S, r + rope_hd] compressed latents (+ rope key)."""
+    B, S = cache.shape[:2]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, dims, pos[:, None])
+    new = jnp.concatenate([c_kv, k_rope], axis=-1)  # [B,1,r+rh]
+    cache = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0)))(
+        cache, new, pos
+    )
+    c_kv_all = cache[..., : dims.kv_lora_rank]
+    k_rope_all = cache[..., dims.kv_lora_rank:]
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    mask = jnp.where(pos[:, None] - k_pos >= 0, 0.0, NEG_INF)[:, None, :]
+    out = _mla_attend(p, q_nope, q_rope, c_kv_all, k_rope_all, mask, dims)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": jax.random.normal(k1, (d_model, d_ff), dtype) * d_model ** -0.5,
+        "wu": jax.random.normal(k2, (d_model, d_ff), dtype) * d_model ** -0.5,
+        "wd": jax.random.normal(k3, (d_ff, d_model), dtype) * d_ff ** -0.5,
+    }
+
+
+def mlp(p, x, act="silu"):
+    g = act_fn(act)(jnp.einsum("bsd,df->bsf", x, p["wg"]))
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+    return jnp.einsum("bsf,fd->bsd", g * u, p["wd"])

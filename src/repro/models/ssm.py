@@ -1,0 +1,322 @@
+"""State-space sequence layers: Mamba-1 (selective scan) and Mamba-2 (SSD).
+
+Both are written in the *chunked* form the TPU kernel targets: the sequence
+is cut into chunks; a ``lax.scan`` carries the recurrent state across
+chunks while all within-chunk work is data-parallel (associative scan for
+Mamba-1, matmul block-decomposition for Mamba-2/SSD).  This bounds peak
+memory to one chunk's activations and keeps the HLO size independent of
+sequence length.
+
+Single-token decode uses the exact recurrence (state update, O(1) per
+token) — the reason SSM archs carry no KV cache and make ``long_500k``
+cheap (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import act_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_state: int
+    d_conv: int = 4
+    expand: int = 2
+    version: int = 1          # 1 = mamba1, 2 = mamba2 (SSD)
+    head_dim: int = 64        # mamba2 P
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(1, math.ceil(self.d_model / 16))
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_ssm(key, dims: SSMDims, dtype=jnp.bfloat16):
+    di, N = dims.d_inner, dims.d_state
+    ks = jax.random.split(key, 8)
+    s = dims.d_model ** -0.5
+    p = {
+        "in_proj": jax.random.normal(ks[0], (dims.d_model, 2 * di), dtype) * s,
+        "conv_w": jax.random.normal(ks[1], (dims.d_conv, di), dtype) * 0.2,
+        "conv_b": jnp.zeros((di,), dtype),
+        "out_proj": jax.random.normal(ks[2], (di, dims.d_model), dtype) * di ** -0.5,
+        "D": jnp.ones((di,), jnp.float32),
+    }
+    if dims.version == 1:
+        p.update(
+            x_dbc=jax.random.normal(ks[3], (di, dims.dt_rank + 2 * N), dtype)
+            * di ** -0.5,
+            dt_proj=jax.random.normal(ks[4], (dims.dt_rank, di), dtype)
+            * dims.dt_rank ** -0.5,
+            dt_bias=jnp.log(
+                jnp.exp(jnp.linspace(1e-3, 1e-1, di)) - 1.0
+            ).astype(jnp.float32),
+            A_log=jnp.log(
+                jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+            ),
+        )
+    else:
+        H = dims.n_heads
+        p.update(
+            x_bcdt=jax.random.normal(ks[3], (di, 2 * N + H), dtype) * di ** -0.5,
+            dt_bias=jnp.log(jnp.exp(jnp.linspace(1e-3, 1e-1, H)) - 1.0).astype(
+                jnp.float32
+            ),
+            A_log=jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+            D_head=jnp.ones((H,), jnp.float32),
+            norm_scale=jnp.zeros((di,), dtype),
+        )
+    return p
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1: chunked selective scan
+# ---------------------------------------------------------------------------
+
+def _selective_scan_chunked(u, dt, A, B, C, chunk: int):
+    """u: [B,S,di]; dt: [B,S,di]; A: [di,N]; B,C: [B,S,N] -> y [B,S,di].
+
+    Within-chunk: associative scan over (decay, input) pairs (elementwise,
+    log-space-stable since decay ∈ (0,1]).  Across chunks: lax.scan carry.
+    """
+    Bsz, S, di = u.shape
+    N = A.shape[-1]
+    nchunks = S // chunk
+    assert S % chunk == 0, "sequence must be chunk-aligned (pad upstream)"
+
+    a = jnp.exp(
+        dt[..., None].astype(jnp.float32) * A[None, None]
+    )  # [B,S,di,N] decay
+    b = (dt * u)[..., None].astype(jnp.float32) * B[:, :, None, :]  # input
+
+    a = a.reshape(Bsz, nchunks, chunk, di, N)
+    b = b.reshape(Bsz, nchunks, chunk, di, N)
+    Cc = C.reshape(Bsz, nchunks, chunk, N)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    def chunk_step(h, inputs):
+        ac, bc, cc = inputs  # [B,chunk,di,N], [B,chunk,N]
+        acc_a, acc_b = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_t = acc_a * h[:, None] + acc_b  # [B,chunk,di,N]
+        y = jnp.einsum("bcdn,bcn->bcd", h_t, cc.astype(jnp.float32))
+        return h_t[:, -1], y
+
+    h0 = jnp.zeros((Bsz, di, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk_step,
+        h0,
+        (
+            jnp.moveaxis(a, 1, 0),
+            jnp.moveaxis(b, 1, 0),
+            jnp.moveaxis(Cc, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, di)
+    return y.astype(u.dtype)
+
+
+def mamba1_forward(p, x, dims: SSMDims):
+    """Full-sequence Mamba-1 block. x: [B,S,D] -> [B,S,D]."""
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = act_fn("silu")(_causal_conv(xin, p["conv_w"], p["conv_b"]))
+    dbc = jnp.einsum("bsd,de->bse", xin, p["x_dbc"])
+    dt_r, Bm, Cm = jnp.split(
+        dbc, [dims.dt_rank, dims.dt_rank + dims.d_state], axis=-1
+    )
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"]
+    )
+    A = -jnp.exp(p["A_log"])
+    if jax.default_backend() == "tpu" and xin.shape[1] % dims.chunk == 0:
+        # VMEM-tiled selective-scan kernel: never materialises the
+        # [S, d_inner, N] decay tensor (see kernels/ssm_scan).
+        from repro.kernels.ssm_scan.ops import ssm_scan_op
+
+        y = ssm_scan_op(
+            xin, dt.astype(xin.dtype), A,
+            Bm.astype(xin.dtype), Cm.astype(xin.dtype),
+            chunk=dims.chunk,
+        )
+    else:
+        y = _selective_scan_chunked(xin, dt, A, Bm.astype(jnp.float32),
+                                    Cm.astype(jnp.float32), dims.chunk)
+    y = y + xin * p["D"].astype(x.dtype)
+    y = y * act_fn("silu")(z)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def mamba1_decode(p, x, dims: SSMDims, h, conv_buf):
+    """One-token recurrence.  x: [B,1,D]; h: [B,di,N];
+    conv_buf: [B,d_conv-1,di] (trailing inputs)."""
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)  # [B,1,di]
+    window = jnp.concatenate([conv_buf, xin], axis=1)  # [B,d_conv,di]
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xc = act_fn("silu")(conv)[:, None, :]  # [B,1,di]
+    dbc = jnp.einsum("bsd,de->bse", xc, p["x_dbc"])
+    dt_r, Bm, Cm = jnp.split(
+        dbc, [dims.dt_rank, dims.dt_rank + dims.d_state], axis=-1
+    )
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_r, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"]
+    )[:, 0]  # [B,di]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A[None])                  # [B,di,N]
+    b = (dt * xc[:, 0])[..., None] * Bm[:, 0, None, :].astype(jnp.float32)
+    h = a * h + b
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))
+    y = y.astype(x.dtype) + xc[:, 0] * p["D"].astype(x.dtype)
+    y = y * act_fn("silu")(z[:, 0])
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None, :]
+    return out, h, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2: SSD (chunked block decomposition)
+# ---------------------------------------------------------------------------
+
+def _ssd_chunked(xh, dt, A, B, C, chunk: int):
+    """SSD scan.  xh: [B,S,H,P]; dt: [B,S,H]; A: [H] (negative);
+    B,C: [B,S,N] (single state group) -> y: [B,S,H,P]."""
+    Bsz, S, H, P = xh.shape
+    N = B.shape[-1]
+    nchunks = S // chunk
+    assert S % chunk == 0
+
+    l = (dt * A[None, None]).astype(jnp.float32)          # [B,S,H] log decay
+    l = l.reshape(Bsz, nchunks, chunk, H)
+    xh_c = xh.reshape(Bsz, nchunks, chunk, H, P)
+    dt_c = dt.reshape(Bsz, nchunks, chunk, H)
+    B_c = B.reshape(Bsz, nchunks, chunk, N).astype(jnp.float32)
+    C_c = C.reshape(Bsz, nchunks, chunk, N).astype(jnp.float32)
+
+    Lcum = jnp.cumsum(l, axis=2)                           # [B,nc,C,H]
+
+    def chunk_step(h, inp):
+        lc, Lc, xc, dtc, Bc, Cc = inp
+        # intra-chunk: masked decay matrix M[t,s] = exp(L_t - L_s), s <= t
+        diff = Lc[:, :, None, :] - Lc[:, None, :, :]       # [B,t,s,H]
+        tri = jnp.tril(jnp.ones((lc.shape[1], lc.shape[1]), bool))
+        M = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        G = jnp.einsum("btn,bsn->bts", Cc, Bc)             # [B,t,s]
+        W = G[:, :, :, None] * M * dtc[:, None, :, :]      # [B,t,s,H]
+        y_intra = jnp.einsum("btsh,bshp->bthp", W, xc.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("btn,bhpn->bthp", Cc, h) * jnp.exp(Lc)[..., None]
+        # new carry
+        decay_to_end = jnp.exp(Lc[:, -1:, :] - Lc)          # [B,s,H]
+        S_c = jnp.einsum(
+            "bsh,bsn,bshp->bhpn",
+            decay_to_end * dtc,
+            Bc,
+            xc.astype(jnp.float32),
+        )
+        h = jnp.exp(Lc[:, -1])[:, :, None, None] * h + S_c
+        return h, y_intra + y_inter
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk_step,
+        h0,
+        tuple(
+            jnp.moveaxis(v, 1, 0)
+            for v in (l, Lcum, xh_c, dt_c.astype(jnp.float32), B_c, C_c)
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    return y.astype(xh.dtype)
+
+
+def mamba2_forward(p, x, dims: SSMDims):
+    """Full-sequence Mamba-2 block."""
+    B_, S, _ = x.shape
+    H, P, N = dims.n_heads, dims.head_dim, dims.d_state
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = act_fn("silu")(_causal_conv(xin, p["conv_w"], p["conv_b"]))
+    bcdt = jnp.einsum("bsd,de->bse", xin, p["x_bcdt"])
+    Bm, Cm, dt_h = jnp.split(bcdt, [N, 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt_h.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    A = -jnp.exp(p["A_log"])                                        # [H]
+    xh = xin.reshape(B_, S, H, P)
+    if jax.default_backend() == "tpu" and S % dims.chunk == 0:
+        # matmul-form SSD kernel (kernels/ssd_scan): [C,C] decay blocks
+        # stay in VMEM, recurrent state carried in scratch across chunks.
+        from repro.kernels.ssd_scan.ops import ssd_scan_op
+
+        y = ssd_scan_op(
+            xh, dt, A, Bm.astype(xh.dtype), Cm.astype(xh.dtype),
+            chunk=dims.chunk,
+        )
+    else:
+        y = _ssd_chunked(xh, dt, A, Bm, Cm, dims.chunk)
+    y = y + xh * p["D_head"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B_, S, H * P)
+    y = y * act_fn("silu")(z)
+    from repro.models.layers import rms_norm
+
+    y = rms_norm(y, p["norm_scale"])
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def mamba2_decode(p, x, dims: SSMDims, h, conv_buf):
+    """One-token SSD recurrence.  h: [B,H,P,N]."""
+    B_ = x.shape[0]
+    H, P, N = dims.n_heads, dims.head_dim, dims.d_state
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([conv_buf, xin], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xc = act_fn("silu")(conv)                                       # [B,di]
+    bcdt = jnp.einsum("bd,de->be", xc, p["x_bcdt"])
+    Bm, Cm, dt_h = jnp.split(bcdt, [N, 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt_h.astype(jnp.float32) + p["dt_bias"])   # [B,H]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None])                                        # [B,H]
+    xh = xc.reshape(B_, H, P)
+    upd = jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xh.astype(jnp.float32)
+    )
+    h = a[:, :, None, None] * h + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32)).astype(x.dtype)
+    y = y + xh * p["D_head"][None, :, None].astype(x.dtype)
+    y = y.reshape(B_, H * P) * act_fn("silu")(z[:, 0])
+    from repro.models.layers import rms_norm
+
+    y = rms_norm(y, p["norm_scale"])
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])[:, None, :]
+    return out, h, window[:, 1:]

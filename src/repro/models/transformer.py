@@ -1,0 +1,495 @@
+"""Model assembly: scanned layer stacks for every assigned arch family.
+
+Design rules (chosen for multi-pod compilation efficiency):
+
+- Layer parameters are **stacked** on a leading axis and the stack is
+  traversed with ``jax.lax.scan`` — HLO size stays O(1) in depth, which
+  keeps the 512-device GSPMD partition time bounded.
+- Per-layer *static-ish* variation (gemma2's alternating local/global
+  attention) is expressed as a scanned per-layer scalar (window size, -1 =
+  global), so one homogeneous stack still covers the pattern.
+- Hybrid (zamba2) splits the depth into groups: an outer scan over groups
+  runs an inner scan of Mamba-2 blocks and then applies the **shared**
+  attention block (one parameter set reused at every group — the Zamba
+  trick), each invocation with its own KV cache slot.
+- Decode paths thread explicit caches through the same scans.
+
+The :class:`Model` facade exposes ``init / forward / loss / decode_step /
+init_decode_state`` and is the only API the serving engine, the launcher
+and the dry-run use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    AttnDims,
+    MLADims,
+    attention,
+    attention_decode,
+    cross_attention,
+    init_attention,
+    init_mla,
+    init_mlp,
+    mla_attention,
+    mla_attention_decode,
+    mlp,
+    rms_norm,
+    softcap,
+)
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.ssm import (
+    SSMDims,
+    init_ssm,
+    mamba1_decode,
+    mamba1_forward,
+    mamba2_decode,
+    mamba2_forward,
+)
+
+
+def _attn_dims(cfg: ModelConfig) -> AttnDims:
+    return AttnDims(
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta,
+        attn_softcap=cfg.attn_logit_softcap,
+    )
+
+
+def _mla_dims(cfg: ModelConfig) -> MLADims:
+    return MLADims(
+        n_heads=cfg.n_heads,
+        head_dim=cfg.head_dim,
+        kv_lora_rank=cfg.kv_lora_rank,
+        q_lora_rank=cfg.q_lora_rank,
+        rope_head_dim=cfg.rope_head_dim,
+        rope_theta=cfg.rope_theta,
+    )
+
+
+def _ssm_dims(cfg: ModelConfig) -> SSMDims:
+    return SSMDims(
+        d_model=cfg.d_model,
+        d_state=cfg.ssm_state,
+        d_conv=cfg.ssm_conv,
+        expand=cfg.ssm_expand,
+        version=cfg.mamba_version,
+        head_dim=cfg.ssm_head_dim,
+        chunk=cfg.ssm_chunk,
+    )
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Single blocks
+# ---------------------------------------------------------------------------
+
+def init_decoder_block(key, cfg: ModelConfig, moe: bool, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    p: dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), dt),
+                         "ln2": jnp.zeros((cfg.d_model,), dt)}
+    if cfg.use_mla:
+        p["attn"] = init_mla(ks[0], cfg.d_model, _mla_dims(cfg), dt)
+    else:
+        p["attn"] = init_attention(ks[0], cfg.d_model, _attn_dims(cfg),
+                                   cfg.qkv_bias, dt)
+    if cross:
+        p["xattn"] = init_attention(ks[1], cfg.d_model, _attn_dims(cfg), False, dt)
+        p["ln_x"] = jnp.zeros((cfg.d_model,), dt)
+    if moe:
+        p["moe"] = init_moe(ks[2], cfg.d_model, cfg.n_experts,
+                            cfg.moe_d_ff or cfg.d_ff, cfg.n_shared_experts, dt)
+    else:
+        p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def decoder_block(p, x, cfg: ModelConfig, positions, window,
+                  memory=None, causal=True):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        h = mla_attention(p["attn"], h, _mla_dims(cfg), positions)
+    elif causal:
+        h = attention(p["attn"], h, _attn_dims(cfg), positions, window)
+    else:  # encoder: bidirectional
+        h = cross_attention(p["attn"], h, h, _attn_dims(cfg))
+    x = x + h
+    if memory is not None:
+        h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        x = x + cross_attention(p["xattn"], h, memory, _attn_dims(cfg))
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        h, aux = moe_ffn(p["moe"], h, cfg.top_k, cfg.capacity_factor, cfg.act)
+    else:
+        h, aux = mlp(p["mlp"], h, cfg.act), jnp.zeros((), jnp.float32)
+    return x + h, aux
+
+
+def decoder_block_decode(p, x, cfg: ModelConfig, cache, pos, window,
+                         memory=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        h, new_ckv = mla_attention_decode(p["attn"], h, _mla_dims(cfg),
+                                          cache["ckv"], pos)
+        new_cache = {"ckv": new_ckv}
+    else:
+        h, nk, nv = attention_decode(p["attn"], h, _attn_dims(cfg),
+                                     cache["k"], cache["v"], pos, window)
+        new_cache = {"k": nk, "v": nv}
+    x = x + h
+    if memory is not None:
+        h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        x = x + cross_attention(p["xattn"], h, memory, _attn_dims(cfg))
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        h, _ = moe_ffn(p["moe"], h, cfg.top_k, cfg.capacity_factor, cfg.act)
+    else:
+        h = mlp(p["mlp"], h, cfg.act)
+    return x + h, new_cache
+
+
+def init_ssm_block(key, cfg: ModelConfig, version: Optional[int] = None):
+    dims = _ssm_dims(cfg)
+    if version is not None:
+        dims = dataclasses.replace(dims, version=version)
+    k1, _ = jax.random.split(key)
+    return {
+        "ln": jnp.zeros((cfg.d_model,), _dtype(cfg)),
+        "ssm": init_ssm(k1, dims, _dtype(cfg)),
+    }
+
+
+def ssm_block(p, x, cfg: ModelConfig):
+    dims = _ssm_dims(cfg)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    fwd = mamba1_forward if dims.version == 1 else mamba2_forward
+    return x + fwd(p["ssm"], h, dims)
+
+
+def ssm_block_decode(p, x, cfg: ModelConfig, h_state, conv_buf):
+    dims = _ssm_dims(cfg)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    dec = mamba1_decode if dims.version == 1 else mamba2_decode
+    out, h_state, conv_buf = dec(p["ssm"], h, dims, h_state, conv_buf)
+    return x + out, h_state, conv_buf
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def _stacked_init(key, n, init_one):
+    keys = jax.random.split(key, max(n, 1))
+    return jax.vmap(init_one)(keys)
+
+
+def _layer_windows(cfg: ModelConfig, n: int):
+    return jnp.asarray([cfg.window_for_layer(i) for i in range(n)], jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Model facade
+# ---------------------------------------------------------------------------
+
+class Model:
+    """Unified multi-architecture model."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init -----------------------------------------------------------------
+
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        k_emb, k_stack, k_extra, k_out = jax.random.split(rng, 4)
+        params: dict[str, Any] = {
+            "embed": jax.random.normal(
+                k_emb, (cfg.vocab_size, cfg.d_model), dt
+            ) * cfg.d_model ** -0.5,
+            "ln_f": jnp.zeros((cfg.d_model,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = jax.random.normal(
+                k_out, (cfg.d_model, cfg.vocab_size), dt
+            ) * cfg.d_model ** -0.5
+
+        if cfg.arch_type == "ssm":
+            params["ssm_stack"] = _stacked_init(
+                k_stack, cfg.n_layers, lambda k: init_ssm_block(k, cfg)
+            )
+        elif cfg.arch_type == "hybrid":
+            g = cfg.shared_attn_every
+            n_groups, rem = divmod(cfg.n_layers, g)
+            kg, kr, ka = jax.random.split(k_stack, 3)
+            params["groups"] = jax.vmap(
+                lambda k: _stacked_init(k, g, lambda kk: init_ssm_block(kk, cfg, 2))
+            )(jax.random.split(kg, n_groups))
+            if rem:
+                params["tail"] = _stacked_init(
+                    kr, rem, lambda kk: init_ssm_block(kk, cfg, 2)
+                )
+            params["shared_attn"] = init_decoder_block(ka, cfg, moe=False)
+        elif cfg.is_encoder_decoder:
+            ke, kd = jax.random.split(k_stack)
+            params["enc_stack"] = _stacked_init(
+                ke, cfg.n_encoder_layers,
+                lambda k: init_decoder_block(k, cfg, moe=False),
+            )
+            params["dec_stack"] = _stacked_init(
+                kd, cfg.n_layers,
+                lambda k: init_decoder_block(k, cfg, moe=False, cross=True),
+            )
+        else:
+            nd = cfg.first_dense_layers if cfg.uses_moe else 0
+            if nd:
+                params["dense_stack"] = _stacked_init(
+                    k_extra, nd, lambda k: init_decoder_block(k, cfg, moe=False)
+                )
+            params["stack"] = _stacked_init(
+                k_stack, cfg.n_layers - nd,
+                lambda k: init_decoder_block(k, cfg, moe=cfg.uses_moe),
+            )
+        return params
+
+    # -- full-sequence forward ---------------------------------------------------
+
+    def forward(self, params, batch: dict, remat: bool = False):
+        """Returns (logits [B,S,V], aux_loss).  ``batch`` carries ``tokens``
+        and optionally ``media`` (VLM patch embeds / audio frames)."""
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]  # [B,S_text,D]
+        if cfg.frontend == "vision" and "media" in batch:
+            x = jnp.concatenate([batch["media"].astype(x.dtype), x], axis=1)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        aux_total = jnp.zeros((), jnp.float32)
+
+        if cfg.arch_type == "ssm":
+            def body(h, p_l):
+                return ssm_block(p_l, h, cfg), None
+            if remat:
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, params["ssm_stack"])
+
+        elif cfg.arch_type == "hybrid":
+            def group_body(h, p_g):
+                def inner(hh, p_l):
+                    return ssm_block(p_l, hh, cfg), None
+                h, _ = jax.lax.scan(inner, h, p_g)
+                h, _ = decoder_block(
+                    params["shared_attn"], h, cfg, positions, -1
+                )
+                return h, None
+            if remat:
+                group_body = jax.checkpoint(group_body)
+            x, _ = jax.lax.scan(group_body, x, params["groups"])
+            if "tail" in params:
+                def inner(hh, p_l):
+                    return ssm_block(p_l, hh, cfg), None
+                x, _ = jax.lax.scan(inner, x, params["tail"])
+
+        elif cfg.is_encoder_decoder:
+            mem = batch["media"].astype(x.dtype)  # audio frame embeds
+            mem_pos = jnp.broadcast_to(
+                jnp.arange(mem.shape[1], dtype=jnp.int32), mem.shape[:2]
+            )
+            def enc_body(h, p_l):
+                h, _ = decoder_block(p_l, h, cfg, mem_pos, -1, causal=False)
+                return h, None
+            if remat:
+                enc_body = jax.checkpoint(enc_body)
+            mem, _ = jax.lax.scan(enc_body, mem, params["enc_stack"])
+            def dec_body(h, p_l):
+                h, _ = decoder_block(p_l, h, cfg, positions, -1, memory=mem)
+                return h, None
+            if remat:
+                dec_body = jax.checkpoint(dec_body)
+            x, _ = jax.lax.scan(dec_body, x, params["dec_stack"])
+
+        else:
+            nd = cfg.first_dense_layers if cfg.uses_moe else 0
+            if nd:
+                def dbody(h, p_l):
+                    h, _ = decoder_block(p_l, h, cfg, positions, -1)
+                    return h, None
+                x, _ = jax.lax.scan(dbody, x, params["dense_stack"])
+            windows = _layer_windows(cfg, cfg.n_layers - nd)
+            def body(h, inp):
+                p_l, w = inp
+                h, aux = decoder_block(p_l, h, cfg, positions, w)
+                return h, aux
+            if remat:
+                body = jax.checkpoint(body)
+            x, auxs = jax.lax.scan(body, x, (params["stack"], windows))
+            aux_total = aux_total + auxs.sum()
+
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        unembed = (
+            params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        )
+        logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+        logits = softcap(logits, cfg.final_logit_softcap)
+        return logits, aux_total
+
+    # -- loss ----------------------------------------------------------------------
+
+    def loss(self, params, batch: dict, remat: bool = True):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, remat=remat)
+        labels = batch["labels"]
+        # media tokens (prefix) carry no labels
+        logits_txt = logits[:, logits.shape[1] - labels.shape[1]:, :]
+        logp = jax.nn.log_softmax(logits_txt.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        ce = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return ce + cfg.router_aux_weight * aux
+
+    # -- decode -----------------------------------------------------------------------
+
+    def init_decode_state(self, batch: int, seq_len: int) -> dict:
+        """Cache pytree for a ``seq_len`` context (abstract-shape friendly)."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        B, S = batch, seq_len
+        K, hd = cfg.n_kv_heads, cfg.head_dim
+        state: dict[str, Any] = {"pos": jnp.zeros((B,), jnp.int32)}
+        dims = _ssm_dims(cfg)
+        if cfg.arch_type == "ssm":
+            L = cfg.n_layers
+            state["h"] = jnp.zeros((L, B, dims.d_inner, dims.d_state), jnp.float32)
+            state["conv"] = jnp.zeros((L, B, dims.d_conv - 1, dims.d_inner), dt)
+        elif cfg.arch_type == "hybrid":
+            g = cfg.shared_attn_every
+            n_groups, rem = divmod(cfg.n_layers, g)
+            H, P, N = dims.n_heads, dims.head_dim, dims.d_state
+            state["h"] = jnp.zeros((n_groups, g, B, H, P, N), jnp.float32)
+            state["conv"] = jnp.zeros((n_groups, g, B, dims.d_conv - 1, dims.d_inner), dt)
+            if rem:
+                state["h_tail"] = jnp.zeros((rem, B, H, P, N), jnp.float32)
+                state["conv_tail"] = jnp.zeros((rem, B, dims.d_conv - 1, dims.d_inner), dt)
+            state["k"] = jnp.zeros((n_groups, B, S, K, hd), dt)
+            state["v"] = jnp.zeros((n_groups, B, S, K, hd), dt)
+        elif cfg.use_mla:
+            L = cfg.n_layers
+            state["ckv"] = jnp.zeros(
+                (L, B, S, cfg.kv_lora_rank + cfg.rope_head_dim), dt
+            )
+        else:
+            L = cfg.n_layers
+            state["k"] = jnp.zeros((L, B, S, K, hd), dt)
+            state["v"] = jnp.zeros((L, B, S, K, hd), dt)
+            if cfg.is_encoder_decoder:
+                # encoder memory computed at prefill, static during decode
+                state["memory"] = jnp.zeros((B, S // 4, cfg.d_model), dt)
+        return state
+
+    def decode_step(self, params, state: dict, tokens):
+        """tokens: [B] -> (logits [B,V], new_state).  One generated token
+        against the current cache (the ``serve_step`` the dry-run lowers
+        for decode_32k / long_500k)."""
+        cfg = self.cfg
+        pos = state["pos"]
+        x = params["embed"][tokens][:, None, :]  # [B,1,D]
+        new_state = dict(state)
+
+        if cfg.arch_type == "ssm":
+            def body(h, inp):
+                p_l, hs, cb = inp
+                h, hs, cb = ssm_block_decode(p_l, h, cfg, hs, cb)
+                return h, (hs, cb)
+            x, (hs, cb) = jax.lax.scan(
+                body, x, (params["ssm_stack"], state["h"], state["conv"])
+            )
+            new_state.update(h=hs, conv=cb)
+
+        elif cfg.arch_type == "hybrid":
+            def group_body(h, inp):
+                p_g, hs_g, cb_g, k_g, v_g = inp
+                def inner(hh, gin):
+                    p_l, hs, cb = gin
+                    hh, hs, cb = ssm_block_decode(p_l, hh, cfg, hs, cb)
+                    return hh, (hs, cb)
+                h, (hs_g, cb_g) = jax.lax.scan(inner, h, (p_g, hs_g, cb_g))
+                h, nc = decoder_block_decode(
+                    params["shared_attn"], h, cfg, {"k": k_g, "v": v_g}, pos, -1
+                )
+                return h, (hs_g, cb_g, nc["k"], nc["v"])
+            x, (hs, cb, ks, vs) = jax.lax.scan(
+                group_body,
+                x,
+                (params["groups"], state["h"], state["conv"],
+                 state["k"], state["v"]),
+            )
+            new_state.update(h=hs, conv=cb, k=ks, v=vs)
+            if "tail" in params:
+                def inner(hh, gin):
+                    p_l, hs_t, cb_t = gin
+                    hh, hs_t, cb_t = ssm_block_decode(p_l, hh, cfg, hs_t, cb_t)
+                    return hh, (hs_t, cb_t)
+                x, (hst, cbt) = jax.lax.scan(
+                    inner, x, (params["tail"], state["h_tail"], state["conv_tail"])
+                )
+                new_state.update(h_tail=hst, conv_tail=cbt)
+
+        elif cfg.use_mla:
+            nd = cfg.first_dense_layers
+            def body(h, inp):
+                p_l, ckv = inp
+                h, nc = decoder_block_decode(p_l, h, cfg, {"ckv": ckv}, pos, -1)
+                return h, nc["ckv"]
+            ckv_all = state["ckv"]
+            if nd:  # DeepSeek's leading dense-FFN layers (MLA attention too)
+                x, ckv_d = jax.lax.scan(
+                    body, x, (params["dense_stack"], ckv_all[:nd])
+                )
+                ckv_all = ckv_all.at[:nd].set(ckv_d)
+            x, ckv_m = jax.lax.scan(body, x, (params["stack"], ckv_all[nd:]))
+            new_state = dict(new_state, ckv=ckv_all.at[nd:].set(ckv_m))
+
+        else:
+            stack_key = "dec_stack" if cfg.is_encoder_decoder else "stack"
+            memory = state.get("memory")
+            nd = cfg.first_dense_layers if cfg.uses_moe else 0
+            windows = _layer_windows(cfg, cfg.n_layers)
+            def body(h, inp):
+                p_l, k_l, v_l, w = inp
+                h, nc = decoder_block_decode(
+                    p_l, h, cfg, {"k": k_l, "v": v_l}, pos, w, memory=memory
+                )
+                return h, (nc["k"], nc["v"])
+            k_all, v_all = state["k"], state["v"]
+            if nd:  # leading dense-FFN layers of a MoE stack
+                x, (kd, vd) = jax.lax.scan(
+                    body,
+                    x,
+                    (params["dense_stack"], k_all[:nd], v_all[:nd], windows[:nd]),
+                )
+                k_all, v_all = k_all.at[:nd].set(kd), v_all.at[:nd].set(vd)
+            x, (ks, vs) = jax.lax.scan(
+                body,
+                x,
+                (params[stack_key], k_all[nd:], v_all[nd:], windows[nd:]),
+            )
+            new_state.update(k=k_all.at[nd:].set(ks), v=v_all.at[nd:].set(vs))
+
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        logits = jnp.einsum("bsd,dv->bsv", x, unembed)[:, 0]
+        logits = softcap(logits, cfg.final_logit_softcap)
+        new_state["pos"] = pos + 1
+        return logits, new_state

@@ -1,0 +1,1 @@
+from repro.roofline.hlo import collective_bytes, roofline_terms  # noqa: F401

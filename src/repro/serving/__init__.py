@@ -1,0 +1,1 @@
+from repro.serving.engine import ServingEngine, StageProfile  # noqa: F401

@@ -1,0 +1,1 @@
+"""Discrete-event simulation of the mobile-edge testbed (§V)."""

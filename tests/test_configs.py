@@ -1,0 +1,69 @@
+"""Config registry invariants (deliverable f)."""
+
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models.config import ALL_SHAPES
+
+EXPECTED_PARAMS_B = {
+    "falcon-mamba-7b": (6.0, 8.5),
+    "qwen2.5-3b": (2.5, 3.6),
+    "llava-next-34b": (30.0, 38.0),
+    "deepseek-v2-236b": (210.0, 250.0),
+    "kimi-k2-1t-a32b": (950.0, 1100.0),
+    "granite-8b": (7.0, 9.0),
+    "seamless-m4t-medium": (0.7, 1.4),
+    "gemma2-2b": (2.2, 3.0),
+    "zamba2-7b": (5.8, 7.8),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_config_loads_and_cites_source(arch):
+    cfg = get_config(arch)
+    assert cfg.name == arch
+    assert cfg.source, f"{arch} must cite its source"
+
+
+@pytest.mark.parametrize("arch,bounds", EXPECTED_PARAMS_B.items())
+def test_param_counts_match_nameplate(arch, bounds):
+    lo, hi = bounds
+    n = get_config(arch).param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo}, {hi}]"
+
+
+def test_moe_active_params_far_below_total():
+    for arch in ("deepseek-v2-236b", "kimi-k2-1t-a32b", "moonshot-v1-16b-a3b"):
+        cfg = get_config(arch)
+        assert cfg.active_param_count() < 0.25 * cfg.param_count()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_variants_are_small(arch):
+    cfg = reduced(get_config(arch))
+    assert cfg.d_model <= 512
+    assert cfg.n_layers <= 5
+    if cfg.uses_moe:
+        assert cfg.n_experts <= 4
+    assert cfg.arch_type == get_config(arch).arch_type  # same family
+
+
+def test_assigned_shape_grid():
+    names = {s.name for s in ALL_SHAPES}
+    assert names == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    by = {s.name: s for s in ALL_SHAPES}
+    assert by["train_4k"].global_batch == 256 and by["train_4k"].seq_len == 4096
+    assert by["long_500k"].seq_len == 524288 and by["long_500k"].global_batch == 1
+
+
+def test_offload_transfer_units_ssm_cheapest():
+    """DESIGN.md §4 quantified: at 32k context, migrating an SSM request is
+    orders of magnitude cheaper than a dense KV cache; MLA sits between."""
+    ctx = 32768
+    ssm = get_config("falcon-mamba-7b").offload_transfer_bytes(ctx)
+    hyb = get_config("zamba2-7b").offload_transfer_bytes(ctx)
+    mla = get_config("deepseek-v2-236b").offload_transfer_bytes(ctx)
+    dense = get_config("llava-next-34b").offload_transfer_bytes(ctx)
+    assert ssm < hyb < dense
+    assert mla < dense
+    assert ssm * 100 < dense  # >100x cheaper

@@ -1,0 +1,137 @@
+"""Unit + property tests for the network-link discretisation (§IV.A.2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bandwidth import BandwidthEstimator
+from repro.core.netlink import NetworkLink, index_of_jax, reserve_jax
+
+
+class TestConstruction:
+    def test_bucket_layout(self):
+        link = NetworkLink(20e6, now=0.0, n_base=8, n_exp=4)
+        assert len(link.buckets) == 12
+        for b in link.buckets[:8]:
+            assert b.capacity == 1
+            assert abs((b.t2 - b.t1) - link.D) < 1e-9
+        caps = [b.capacity for b in link.buckets[8:]]
+        assert caps == [2, 4, 8, 16]
+        # contiguous coverage
+        for a, b in zip(link.buckets, link.buckets[1:]):
+            assert abs(a.t2 - b.t1) < 1e-9
+
+    def test_t_r_rounds_up(self):
+        link = NetworkLink(20e6, now=1.0)
+        assert link.t_r >= 1.0
+        r = link.t_r % link.D
+        assert min(r, link.D - r) < 1e-6  # multiple of D up to fp error
+
+
+class TestIndexing:
+    @given(t=st.floats(0.0, 5000.0, allow_nan=False))
+    @settings(max_examples=200, deadline=None)
+    def test_index_bucket_contains_or_follows(self, t):
+        link = NetworkLink(20e6, now=0.0, n_base=16, n_exp=10)
+        idx = link.index_of(t)
+        if t > link.buckets[-1].t2:
+            return  # beyond horizon: clamped
+        assert 0 <= idx < len(link.buckets)
+        b = link.buckets[idx]
+        # the indexed bucket must not END before the timestamp
+        assert b.t2 > t - link.D - 1e-9
+
+    def test_past_timestamp_negative(self):
+        link = NetworkLink(20e6, now=100.0)
+        assert link.index_of(1.0) == -1
+
+    def test_paper_formula_base_region_agrees(self):
+        link = NetworkLink(20e6, now=0.0, n_base=16, n_exp=8)
+        for t in np.linspace(0.0, 14 * link.D, 40):
+            a, b = link.index_of(float(t)), link.index_of_paper(float(t))
+            if b < link.n_base:
+                assert a == b
+
+    @given(t=st.floats(0.0, 2000.0, allow_nan=False))
+    @settings(max_examples=100, deadline=None)
+    def test_jax_index_matches_python(self, t):
+        link = NetworkLink(20e6, now=0.0, n_base=16, n_exp=10)
+        py = link.index_of(t)
+        jx = int(
+            index_of_jax(t, link.t_r, link.D, link.n_base, len(link.buckets))
+        )
+        if py >= 0:
+            assert jx == py
+
+
+class TestReservation:
+    def test_capacity_respected(self):
+        link = NetworkLink(20e6, now=0.0, n_base=4, n_exp=3)
+        for i in range(40):
+            link.reserve(i, 0.0)
+        for b in link.buckets:
+            assert len(b.items) <= b.capacity
+
+    def test_reserve_walks_forward(self):
+        link = NetworkLink(20e6, now=0.0, n_base=4, n_exp=2)
+        w1 = link.reserve(1, 0.1)
+        w2 = link.reserve(2, 0.1)
+        assert w2[0] >= w1[0]
+        assert w1 != w2  # base buckets have capacity 1
+
+    def test_release(self):
+        link = NetworkLink(20e6, now=0.0)
+        link.reserve(7, 0.0)
+        assert link.occupancy() == 1
+        link.release(7)
+        assert link.occupancy() == 0
+
+    def test_jax_reserve_first_free(self):
+        link = NetworkLink(20e6, now=0.0, n_base=4, n_exp=2)
+        link.reserve(0, 0.0)
+        arrs = link.to_arrays()
+        found, idx = reserve_jax(
+            arrs["t1"], arrs["t2"], arrs["capacity"], arrs["used"], 0.0
+        )
+        assert bool(found)
+        assert arrs["used"][int(idx)] < arrs["capacity"][int(idx)]
+
+
+class TestCascade:
+    def test_cascade_carries_future_items(self):
+        old = NetworkLink(20e6, now=0.0)
+        for i in range(6):
+            old.reserve(i, 5.0 + i)
+        new = NetworkLink(10e6, now=6.0)  # bandwidth halved -> D doubles
+        carried = new.cascade_from(old)
+        assert carried >= 4  # items at t>=6-D survive
+        assert new.occupancy() == carried
+
+    def test_cascade_drops_past_items(self):
+        old = NetworkLink(20e6, now=0.0)
+        old.reserve(0, 0.0)
+        new = NetworkLink(20e6, now=500.0)
+        assert new.cascade_from(old) == 0
+
+
+class TestBandwidthEstimator:
+    def test_ewma(self):
+        est = BandwidthEstimator(20e6, alpha=0.3)
+        est.update([10e6])
+        assert abs(est.estimate_bps - (0.3 * 10e6 + 0.7 * 20e6)) < 1.0
+
+    def test_empty_update_keeps_estimate(self):
+        est = BandwidthEstimator(20e6)
+        est.update([])
+        assert est.estimate_bps == 20e6
+
+    @given(
+        samples=st.lists(st.floats(1e5, 1e8), min_size=1, max_size=30),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_estimate_stays_in_sample_hull(self, samples):
+        est = BandwidthEstimator(20e6)
+        est.update(samples)
+        lo = min(min(samples), 20e6) - 1.0
+        hi = max(max(samples), 20e6) + 1.0
+        assert lo <= est.estimate_bps <= hi

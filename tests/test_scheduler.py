@@ -1,0 +1,219 @@
+"""Behaviour tests for the RAS scheduler and WPS baseline (§IV.B)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import RASScheduler
+from repro.core.tasks import (
+    HP_CONFIG,
+    LP2_CONFIG,
+    LP4_CONFIG,
+    LPRequest,
+    Priority,
+    Task,
+    TaskState,
+)
+from repro.core.wps import WPSScheduler
+
+BW = 20e6
+
+
+def hp_task(src=0, t=0.0, dl=3.0):
+    return Task(Priority.HIGH, src, t, t + dl, frame_id=0)
+
+
+def lp_request(n, src=0, t=0.0, dl=40.0):
+    tasks = [Task(Priority.LOW, src, t, t + dl, frame_id=0) for _ in range(n)]
+    return LPRequest(tasks, src, t)
+
+
+@pytest.mark.parametrize("cls", [RASScheduler, WPSScheduler])
+class TestCommon:
+    def test_hp_allocates_locally(self, cls):
+        s = cls(4, BW)
+        t = hp_task()
+        res = s.schedule_hp(t, 0.0)
+        assert res.success and t.device == t.source_device
+        assert t.config is HP_CONFIG
+
+    def test_lp_prefers_two_cores(self, cls):
+        s = cls(4, BW)
+        req = lp_request(2)
+        res = s.schedule_lp(req, 0.0)
+        assert res.success
+        assert all(t.config is LP2_CONFIG for t in req.tasks)
+
+    def test_lp_widens_to_four_cores_near_deadline(self, cls):
+        s = cls(4, BW)
+        req = lp_request(1, dl=LP4_CONFIG.padded_time + 1.0)
+        res = s.schedule_lp(req, 0.0)
+        assert res.success
+        assert req.tasks[0].config is LP4_CONFIG
+
+    def test_lp_impossible_deadline_fails_fast(self, cls):
+        s = cls(4, BW)
+        req = lp_request(1, dl=5.0)
+        res = s.schedule_lp(req, 0.0)
+        assert not res.success and res.reason == "deadline"
+
+    def test_deadline_never_violated_at_allocation(self, cls):
+        s = cls(4, BW)
+        for k in range(6):
+            req = lp_request(2, t=k * 1.0)
+            res = s.schedule_lp(req, k * 1.0)
+            if res.success:
+                for t in req.tasks:
+                    assert t.end_time <= t.deadline + 1e-6
+
+    def test_preemption_evicts_farthest_deadline(self, cls):
+        s = cls(1, BW)  # single device => no offloading possible
+        a = lp_request(1, dl=40.0)
+        assert s.schedule_lp(a, 0.0).success
+        b = lp_request(1, dl=60.0)
+        assert s.schedule_lp(b, 0.0).success
+        # device now fully busy (2 x 2-core): HP must preempt
+        t = hp_task()
+        res = s.schedule_hp(t, 1.0)
+        assert res.success and len(res.preempted) == 1
+        assert res.preempted[0] is b.tasks[0]  # farthest deadline
+        assert res.preempted[0].state == TaskState.PREEMPTED
+
+    def test_latency_positive_and_bounded(self, cls):
+        s = cls(4, BW)
+        res = s.schedule_lp(lp_request(4), 0.0)
+        assert 0.0 < res.latency < 5.0
+
+
+class TestRASSpecific:
+    def test_ras_faster_than_wps(self):
+        ras, wps = RASScheduler(4, BW), WPSScheduler(4, BW)
+        # seed identical moderate load
+        for k in range(4):
+            ras.schedule_lp(lp_request(3, src=k % 4, t=0.0), 0.0)
+            wps.schedule_lp(lp_request(3, src=k % 4, t=0.0), 0.0)
+        r = ras.schedule_lp(lp_request(4, t=1.0), 1.0)
+        w = wps.schedule_lp(lp_request(4, t=1.0), 1.0)
+        assert r.latency < w.latency
+
+    def test_load_balance_spreads_offloads(self):
+        s = RASScheduler(4, BW, seed=3)
+        req = lp_request(4)
+        assert s.schedule_lp(req, 0.0).success
+        devices = {t.device for t in req.tasks}
+        assert len(devices) >= 2  # not all crammed on one device
+
+    def test_comm_slot_respected(self):
+        s = RASScheduler(2, BW)
+        # saturate source device so the next request must offload
+        assert s.schedule_lp(lp_request(2, src=0), 0.0).success
+        req = lp_request(1, src=0)
+        assert s.schedule_lp(req, 0.0).success
+        t = req.tasks[0]
+        if t.offloaded:
+            assert t.comm_window is not None
+            assert t.start_time >= t.comm_window[1] - 1e-9
+
+    def test_bandwidth_update_rebuilds_link(self):
+        s = RASScheduler(4, BW)
+        s.schedule_lp(lp_request(2, src=0), 0.0)
+        old_D = s.link.D
+        s.bandwidth_update([5e6] * 10, now=10.0)
+        assert s.link.D > old_D  # estimate dropped -> base unit grew
+        assert s.cascade_count == 1
+
+    def test_preemption_rebuild_preserves_remaining_tasks(self):
+        s = RASScheduler(1, BW)
+        a, b = lp_request(1, dl=40.0), lp_request(1, dl=60.0)
+        assert s.schedule_lp(a, 0.0).success
+        assert s.schedule_lp(b, 0.0).success
+        res = s.schedule_hp(hp_task(), 1.0)
+        assert res.success
+        dev = s.devices[0]
+        ids = {t.task_id for t in dev.workload}
+        assert a.tasks[0].task_id in ids
+        assert b.tasks[0].task_id not in ids
+
+
+class TestWPSSpecific:
+    def test_static_bandwidth(self):
+        s = WPSScheduler(4, BW)
+        s.bandwidth_update([5e6] * 10, now=10.0)
+        assert s.bw.estimate_bps == BW  # prior work: static baseline
+
+    def test_exact_link_gaps_serialize(self):
+        s = WPSScheduler(2, BW)
+        assert s.schedule_lp(lp_request(2, src=0), 0.0).success
+        req = lp_request(2, src=0)
+        assert s.schedule_lp(req, 0.0).success
+        offloaded = [t for t in req.tasks if t.offloaded]
+        offloaded.sort(key=lambda t: t.comm_window[0])
+        for a, b in zip(offloaded, offloaded[1:]):
+            assert a.comm_window[1] <= b.comm_window[0] + 1e-9
+
+
+@given(
+    sizes=st.lists(st.integers(1, 4), min_size=1, max_size=8),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=40, deadline=None)
+def test_property_allocations_fit_capacity(sizes, seed):
+    """Network-wide invariant: accepted allocations never exceed any
+    device's core capacity at any instant (both schedulers)."""
+    for cls in (RASScheduler, WPSScheduler):
+        s = cls(4, BW, seed=seed)
+        placed = []
+        for i, n in enumerate(sizes):
+            req = lp_request(n, src=i % 4, t=float(i), dl=60.0)
+            if s.schedule_lp(req, float(i)).success:
+                placed.extend(req.tasks)
+        for d in range(4):
+            events = []
+            for t in placed:
+                if t.device == d:
+                    events.append((t.start_time, t.config.cores))
+                    events.append((t.end_time, -t.config.cores))
+            events.sort()
+            cur = 0
+            for _, delta in events:
+                cur += delta
+                assert cur <= 4, f"{cls.name} overcommitted device {d}"
+
+
+class TestHybridScheduler:
+    def test_interface_and_soundness(self):
+        from repro.core.hybrid import HybridScheduler
+
+        s = HybridScheduler(4, BW, seed=1)
+        placed = []
+        for i in range(8):
+            req = lp_request(2, src=i % 4, t=float(i), dl=60.0)
+            if s.schedule_lp(req, float(i)).success:
+                placed.extend(req.tasks)
+        for d in range(4):
+            events = []
+            for t in placed:
+                if t.device == d:
+                    events.append((t.start_time, t.config.cores))
+                    events.append((t.end_time, -t.config.cores))
+            events.sort()
+            cur = 0
+            for _, delta in events:
+                cur += delta
+                assert cur <= 4, "HYB overcommitted a device"
+
+    def test_switches_modes_with_load(self):
+        from repro.core.hybrid import HybridScheduler
+
+        s = HybridScheduler(4, BW, seed=1)
+        assert s._exact_mode()  # empty network -> exact path
+        for i in range(8):
+            s.schedule_lp(lp_request(2, src=i % 4, t=0.0, dl=120.0), 0.0)
+        assert not s._exact_mode()  # loaded -> abstraction path
+
+    def test_sim_runs_end_to_end(self):
+        from repro.sim.engine import ExperimentConfig, run_experiment
+
+        m = run_experiment(ExperimentConfig(
+            scheduler="hyb", trace="weighted2", n_frames=20, seed=3))
+        assert m.frames_total > 0
+        assert m.frame_completion_rate > 0.5

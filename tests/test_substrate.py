@@ -1,0 +1,190 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, roofline
+analyzer, serving engine."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import restore, save
+from repro.configs import get_config, reduced
+from repro.data.pipeline import SyntheticCorpus, make_batch_specs
+from repro.models.config import ALL_SHAPES, TRAIN_4K, DECODE_32K
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+)
+from repro.roofline.hlo_graph import HloModule, analyze
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+class TestAdamW:
+    def _setup(self):
+        params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+        grads = {"w": jnp.full((4, 4), 0.5), "b": jnp.ones((4,))}
+        return params, grads
+
+    def test_update_moves_params(self):
+        params, grads = self._setup()
+        cfg = AdamWConfig(lr=1e-2, warmup_steps=0)
+        opt = adamw_init(params)
+        new_params, opt, info = adamw_update(cfg, grads, opt, params)
+        assert int(opt.step) == 1
+        assert not jnp.allclose(new_params["w"], params["w"])
+        assert jnp.isfinite(info["grad_norm"])
+
+    def test_clipping(self):
+        params, _ = self._setup()
+        grads = {"w": jnp.full((4, 4), 1e6), "b": jnp.full((4,), 1e6)}
+        cfg = AdamWConfig(lr=1e-2, clip_norm=1.0, warmup_steps=0)
+        opt = adamw_init(params)
+        new_params, _, info = adamw_update(cfg, grads, opt, params)
+        assert jnp.isfinite(jax.tree_util.tree_reduce(
+            lambda a, b: a + jnp.sum(b), new_params, 0.0))
+
+    def test_schedule_shape(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+        lrs = [float(cosine_schedule(cfg, jnp.asarray(s))) for s in
+               (0, 5, 10, 50, 100)]
+        assert lrs[0] == 0.0
+        assert lrs[1] == pytest.approx(0.5)
+        assert lrs[2] == pytest.approx(1.0)
+        assert lrs[3] < 1.0
+        assert lrs[4] == pytest.approx(0.1, abs=1e-3)
+
+    @given(scale=st.floats(1e-3, 1e3))
+    @settings(max_examples=20, deadline=None)
+    def test_global_norm_homogeneous(self, scale):
+        t = {"a": jnp.ones((3, 3)), "b": jnp.ones((2,))}
+        n1 = float(global_norm(t))
+        n2 = float(global_norm(jax.tree_util.tree_map(lambda x: x * scale, t)))
+        assert n2 == pytest.approx(n1 * scale, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+class TestData:
+    def test_stateless_resume(self):
+        cfg = reduced(get_config("qwen2.5-3b"))
+        c = SyntheticCorpus(cfg, seq_len=32, batch_size=2, seed=5)
+        a = c.batch(7)
+        b = SyntheticCorpus(cfg, seq_len=32, batch_size=2, seed=5).batch(7)
+        assert (a["tokens"] == b["tokens"]).all()
+
+    def test_labels_shifted(self):
+        cfg = reduced(get_config("granite-8b"))
+        c = SyntheticCorpus(cfg, seq_len=16, batch_size=1, seed=0)
+        b = c.batch(0)
+        assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
+        assert b["labels"][0, -1] == -1
+
+    def test_media_for_frontends(self):
+        for arch in ("llava-next-34b", "seamless-m4t-medium"):
+            cfg = reduced(get_config(arch))
+            c = SyntheticCorpus(cfg, seq_len=32, batch_size=2, seed=0)
+            assert "media" in c.batch(0)
+
+    @pytest.mark.parametrize("shape", ALL_SHAPES, ids=lambda s: s.name)
+    def test_batch_specs_cover_inputs(self, shape):
+        cfg = get_config("qwen2.5-3b")
+        specs = make_batch_specs(cfg, shape)
+        assert "tokens" in specs
+        if shape.kind == "train":
+            assert "labels" in specs
+        if shape.kind == "decode":
+            assert specs["tokens"].shape == (shape.global_batch,)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        params = {
+            "stack": {"w": np.arange(12, dtype=np.float32).reshape(3, 4)},
+            "embed": np.ones((5, 2), np.float32),
+        }
+        save(str(tmp_path / "ck"), params, step=42)
+        like = jax.tree_util.tree_map(jnp.asarray, params)
+        restored, step = restore(str(tmp_path / "ck"), like=like)
+        assert step == 42
+        np.testing.assert_array_equal(
+            np.asarray(restored["stack"]["w"]), params["stack"]["w"]
+        )
+
+    def test_model_params_roundtrip(self, tmp_path):
+        cfg = reduced(get_config("gemma2-2b"))
+        from repro.models.transformer import Model
+
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        save(str(tmp_path / "ck"), params, step=1)
+        restored, _ = restore(str(tmp_path / "ck"), like=params)
+        flat_a = jax.tree_util.tree_leaves(params)
+        flat_b = jax.tree_util.tree_leaves(restored)
+        assert all(
+            np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+            for a, b in zip(flat_a, flat_b)
+        )
+
+
+# ---------------------------------------------------------------------------
+# roofline HLO analyzer
+# ---------------------------------------------------------------------------
+
+class TestHloAnalyzer:
+    def test_scan_trip_weighting(self):
+        def scanned(x, w):
+            def body(h, wl):
+                return jnp.tanh(h @ wl), None
+            h, _ = jax.lax.scan(body, x, w)
+            return h
+
+        x = jnp.ones((32, 32))
+        w = jnp.ones((7, 32, 32))
+        txt = jax.jit(scanned).lower(x, w).compile().as_text()
+        a = analyze(txt)
+        assert a["weighted_dot_flops"] == pytest.approx(7 * 2 * 32 ** 3)
+
+    def test_plain_matmul(self):
+        f = lambda x, w: x @ w
+        x = jnp.ones((64, 128))
+        w = jnp.ones((128, 32))
+        txt = jax.jit(f).lower(x, w).compile().as_text()
+        a = analyze(txt)
+        assert a["weighted_dot_flops"] == pytest.approx(2 * 64 * 128 * 32)
+
+    def test_no_collectives_single_device(self):
+        f = lambda x: (x @ x).sum()
+        txt = jax.jit(f).lower(jnp.ones((16, 16))).compile().as_text()
+        a = analyze(txt)
+        assert a["collectives_weighted"].get("total_wire_bytes", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# serving engine (scheduler + real model execution)
+# ---------------------------------------------------------------------------
+
+class TestServing:
+    def test_waste_pipeline_serves(self):
+        from repro.serving.engine import ServingEngine
+
+        cfg = get_config("waste-pipeline")
+        eng = ServingEngine(cfg, n_workers=2, scheduler="ras", seed=0)
+        r = eng.submit_frame(0, source_worker=0, n_classifications=2, now=0.0)
+        assert r.completed
+        assert r.logits_checksum != 0.0  # real forward passes ran
+        assert eng.completion_rate() == 1.0
