@@ -1,0 +1,91 @@
+"""Fleet-engine throughput: replicas/sec vs batch size, against the
+serial discrete-event simulator looped one replica at a time.
+
+The acceptance bar for the batched engine is >= 10x the serial DES at
+batch 256 (same frame count, same uniform workload family).  Emits
+BENCH_fleet.json with the full curve.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import csv_row, emit
+from repro.fleet import FleetParams, fleet_run, make_fleet, make_workload
+from repro.sim.engine import ExperimentConfig, run_experiment
+
+
+def _time_fleet(batch: int, n_frames: int, params: FleetParams) -> dict:
+    wl = make_workload("uniform", batch, n_frames, params.n_devices, seed=0)
+    fleet = make_fleet(batch, params.n_devices)
+    t0 = time.perf_counter()
+    jax.block_until_ready(
+        fleet_run(fleet, wl.values, wl.bw_scale, params=params)
+    )
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jax.block_until_ready(
+        fleet_run(fleet, wl.values, wl.bw_scale, params=params)
+    )
+    run_s = time.perf_counter() - t0
+    return {
+        "batch": batch,
+        "compile_s": round(compile_s, 3),
+        "run_s": round(run_s, 4),
+        "replicas_per_s": round(batch / run_s, 2),
+    }
+
+
+def _time_serial(n_frames: int, reps: int = 3) -> float:
+    """Seconds per replica of the serial DES (median of `reps` runs)."""
+    times = []
+    for seed in range(reps):
+        t0 = time.perf_counter()
+        run_experiment(
+            ExperimentConfig(trace="uniform", n_frames=n_frames, seed=seed)
+        )
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
+def run(*, quick: bool = False, n_frames: int = 40) -> dict:
+    batch_sizes = (256,) if quick else (32, 128, 256)
+    params = FleetParams()
+
+    serial_s = _time_serial(n_frames)
+    serial_rps = 1.0 / serial_s
+    csv_row("fleet_serial_des", serial_s * 1e6, "1_replica_per_process")
+
+    curve = []
+    for b in batch_sizes:
+        r = _time_fleet(b, n_frames, params)
+        r["speedup_vs_serial"] = round(r["replicas_per_s"] / serial_rps, 2)
+        curve.append(r)
+        csv_row(
+            f"fleet_batched_b{b}", r["run_s"] / b * 1e6,
+            f"{r['speedup_vs_serial']}x_serial",
+        )
+
+    out = {
+        "n_frames": n_frames,
+        "backend": jax.default_backend(),
+        "serial_des_s_per_replica": round(serial_s, 4),
+        "serial_des_replicas_per_s": round(serial_rps, 2),
+        "fleet": curve,
+        "speedup_at_256": next(
+            (r["speedup_vs_serial"] for r in curve if r["batch"] == 256), None
+        ),
+    }
+    out["meets_10x_bar"] = bool(
+        out["speedup_at_256"] and out["speedup_at_256"] >= 10.0
+    )
+    emit("BENCH_fleet", out)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(), indent=1))

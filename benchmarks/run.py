@@ -40,6 +40,9 @@ def main() -> None:
     from benchmarks import bench_query
     bench_query.run()
 
+    from benchmarks import bench_fleet
+    r5 = bench_fleet.run(quick=args.quick)
+
     from benchmarks import roofline
     roofline.run()
 
@@ -47,6 +50,7 @@ def main() -> None:
     for name, r in (("fig4", r1), ("fig5", r2), ("fig7", r3), ("fig8", r4)):
         for k, v in r["paper_checks"].items():
             all_checks[f"{name}.{k}"] = bool(v)
+    all_checks["fleet.speedup_10x_at_b256"] = bool(r5["meets_10x_bar"])
     n_ok = sum(all_checks.values())
     print(f"# paper-claim checks: {n_ok}/{len(all_checks)} passed "
           f"({time.time() - t0:.1f}s total)")

@@ -1,0 +1,24 @@
+"""Batched Monte-Carlo fleet simulator (see engine.py for the contract)."""
+
+from repro.fleet.engine import FleetParams, fleet_run
+from repro.fleet.metrics import FleetStats, init_stats, summarize
+from repro.fleet.scenarios import Workload, make_workload, scenario_names
+from repro.fleet.state import FleetState, broadcast_state, make_fleet, stack_states
+from repro.fleet.sweep import SweepConfig, run_sweep
+
+__all__ = [
+    "FleetParams",
+    "FleetState",
+    "FleetStats",
+    "SweepConfig",
+    "Workload",
+    "broadcast_state",
+    "fleet_run",
+    "init_stats",
+    "make_fleet",
+    "make_workload",
+    "run_sweep",
+    "scenario_names",
+    "stack_states",
+    "summarize",
+]

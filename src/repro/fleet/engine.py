@@ -1,0 +1,224 @@
+"""Batched fixed-step fleet simulator: B replicas per XLA program.
+
+The serial simulator (sim/engine.py) is an event-driven replay of one
+testbed — rich (controller serialisation, execution jitter, preemption)
+but one replica per Python process.  This engine trades event granularity
+for throughput: a `jax.lax.scan` over frame periods advances **every
+replica of a Monte-Carlo fleet at once**, with the per-tick pipeline
+
+    housekeeping → frame release → HP placement → LP placement → accounting
+
+entirely inside one jitted program.  Placement reuses the §IV data
+structures of core/jax_state.py — the multi-containment query runs through
+the batched Pallas window-query kernel (one launch for the whole fleet)
+and commits through `_bisect`'s fan-out write under `vmap`.
+
+Fidelity contract (what the abstraction keeps / drops):
+
+- keeps: RAS window semantics (placements are guaranteed, so a committed
+  task completes by its deadline — violations surface as placement
+  failures), 2-core-preferred / 4-core-fallback LP configs, source-device
+  preference, serial-link transfer queueing, per-replica bandwidth churn,
+  HP preemption as capacity eviction (HP always runs; a missing reserved
+  gap consumes LP availability and is counted as a preemption).
+- drops: controller queueing latency, run-time jitter, and per-victim
+  reallocation latency (committed LP placements keep their completion
+  credit — the serial engine's reallocation path succeeds in the common
+  case, so this biases completion slightly up under extreme preemption).
+
+Use the serial engine for paper-figure replication; use the fleet for
+scenario sweeps at scale (sweep.py fans seed × scenario × congestion
+grids into batches).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jax_state import BIG, SchedState, _bisect
+from repro.core.tasks import FRAME_PERIOD, MAX_IMAGE_BYTES
+from repro.fleet.metrics import FleetStats, init_stats
+from repro.fleet.state import FleetState
+from repro.kernels.window_query.ops import window_query_batched_op
+
+HP_IDX, LP2_IDX, LP4_IDX = 0, 1, 2
+MAX_LP = 4   # trace alphabet spawns at most 4 DNN tasks per frame
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetParams:
+    """Static (compile-time) knobs of the batched engine."""
+
+    n_devices: int = 4
+    nominal_bw_bps: float = 20e6
+    transfer_bytes: int = MAX_IMAGE_BYTES
+    hp_deadline: float = 3.0
+    lp_deadline_factor: float = 1.2
+    stagger: float = 1.0
+    #: window_query_batched_op backend: "auto" | "kernel" | "ref".
+    query_backend: str = "auto"
+
+
+def _query(st: SchedState, cfg_idx: int, q1, deadline, dur, p: FleetParams):
+    """[B,Dev] multi-containment query on one config's window arrays."""
+    return window_query_batched_op(
+        st.win_t1[:, :, cfg_idx],
+        st.win_t2[:, :, cfg_idx],
+        st.win_valid[:, :, cfg_idx],
+        q1, deadline, dur,
+        backend=p.query_backend,
+    )
+
+
+def _hp_query(st: SchedState, dev: int, now, dur, hp_deadline: float):
+    """HP containment query on one device: a `dur` slot starting in
+    [now, now + hp_deadline - dur] (§IV.B.1)."""
+    t1 = st.win_t1[:, dev, HP_IDX]                    # [B, T, W]
+    t2 = st.win_t2[:, dev, HP_IDX]
+    valid = st.win_valid[:, dev, HP_IDX]
+    nowb = now[:, None, None]
+    durb = dur[:, None, None]
+    deadline = nowb + jnp.maximum(hp_deadline, durb + 1e-6)
+    start = jnp.maximum(t1, nowb)
+    feasible = valid & (start + durb <= jnp.minimum(t2, deadline))
+    key = jnp.where(feasible, start, BIG).reshape(t1.shape[0], -1)
+    best = jnp.min(key, axis=1)
+    return best < BIG, best
+
+
+def _consume(st: SchedState, dev, s, e, do):
+    """Masked, vmapped fan-out commit of [s, e) on `dev` (per replica)."""
+    new = jax.vmap(
+        lambda st1, d, s1, e1: _bisect(
+            st1, d, 0, jnp.int32(0), jnp.int32(0), s1, e1
+        )
+    )(st, dev, s, e)
+    pick = lambda n, o: jnp.where(
+        do.reshape((-1,) + (1,) * (n.ndim - 1)), n, o
+    )
+    return jax.tree_util.tree_map(pick, new, st)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
+              *, params: FleetParams) -> tuple[FleetState, FleetStats]:
+    """Advance a whole fleet over `values` ([F, B, Dev] workload) in one
+    jitted scan.  `bw_scale` is [F, B].  Returns the final state and the
+    per-replica counters."""
+    p = params
+    B = fleet.sched.win_t1.shape[0]
+    n_dev = p.n_devices
+    assert values.shape[2] == n_dev and fleet.sched.win_t1.shape[1] == n_dev
+    dev_ids = jnp.arange(n_dev)
+
+    def frame_step(carry, xs):
+        st, link_free, stats = carry
+        f, v, bws = xs                       # f i32, v [B,Dev] i32, bws [B]
+        base = f.astype(jnp.float32) * FRAME_PERIOD
+        # housekeeping: recycle slots of fully-elapsed windows so the
+        # fixed-W arrays never clog (the batched analog of the serial
+        # engine's per-frame stale-window prune)
+        st = st._replace(win_valid=st.win_valid & (st.win_t2 > base))
+
+        for d in range(n_dev):
+            t_rel = base + d * (FRAME_PERIOD / n_dev) * p.stagger
+            now = jnp.full((B,), 0.0, jnp.float32) + t_rel
+            vd = v[:, d].astype(jnp.int32)
+            has_frame = vd >= 0
+
+            # -- HP: immediate slot on the source device -------------------
+            # The detector always runs at frame release (§IV.B.1): if the
+            # strict-containment query finds no reserved gap, HP evicts LP
+            # capacity (the paper's single-victim preemption — 2 HP cores
+            # never need more than one LP victim).  Either way [now,
+            # now+dur) is consumed from every availability list, which is
+            # exactly what preemption does to *future* capacity; committed
+            # LP placements keep their completion credit, mirroring the
+            # serial engine's usually-successful reallocation path.
+            hp_dur = st.min_dur[:, HP_IDX]
+            hp_found, hp_start = _hp_query(st, d, now, hp_dur, p.hp_deadline)
+            hp_start = jnp.where(hp_found, hp_start, now)
+            hp_ok = has_frame
+            st = _consume(
+                st, jnp.full((B,), d), hp_start, hp_start + hp_dur, hp_ok
+            )
+            stats = stats._replace(
+                frames=stats.frames + has_frame,
+                hp_completed=stats.hp_completed + hp_ok,
+                hp_preempted=stats.hp_preempted + (has_frame & ~hp_found),
+            )
+
+            # -- LP: up to 4 DNN tasks once HP completes -------------------
+            n_lp = jnp.where(hp_ok, jnp.clip(vd, 0, MAX_LP), 0)
+            release = hp_start + hp_dur
+            deadline = now + p.lp_deadline_factor * FRAME_PERIOD
+            ttime = (p.transfer_bytes * 8.0) / (
+                p.nominal_bw_bps * jnp.maximum(bws, 1e-3)
+            )
+            frame_ok = hp_ok
+            for k in range(MAX_LP):
+                mask = hp_ok & (k < n_lp)
+                comm_end = jnp.maximum(link_free, release) + ttime
+                # remote devices can only start once their transfer lands
+                q1 = jnp.where(
+                    dev_ids[None, :] == d, release[:, None],
+                    jnp.maximum(release, comm_end)[:, None],
+                )
+                dl = jnp.broadcast_to(deadline[:, None], (B, n_dev))
+                ok_c, start_c, dur_c = [], [], []
+                for ci in (LP2_IDX, LP4_IDX):
+                    dur = st.min_dur[:, ci]
+                    found, starts = _query(
+                        st, ci, q1, dl, jnp.broadcast_to(dur[:, None],
+                                                         (B, n_dev)), p
+                    )
+                    # prefer the source device, then earliest start
+                    key = jnp.where(found.astype(bool), starts, BIG)
+                    key = key - jnp.where(dev_ids[None, :] == d, 1e-3, 0.0)
+                    sel = jnp.argmin(key, axis=1)
+                    ok_c.append(jnp.take_along_axis(
+                        found.astype(bool), sel[:, None], axis=1)[:, 0])
+                    start_c.append(jnp.take_along_axis(
+                        starts, sel[:, None], axis=1)[:, 0])
+                    dur_c.append((dur, sel))
+                # §IV.B.2: 2-core preferred; widen to 4 cores only when the
+                # deadline would otherwise be violated
+                use4 = ~ok_c[0] & ok_c[1]
+                ok = (ok_c[0] | ok_c[1]) & mask
+                sel = jnp.where(use4, dur_c[1][1], dur_c[0][1])
+                start = jnp.where(use4, start_c[1], start_c[0])
+                dur = jnp.where(use4, dur_c[1][0], dur_c[0][0])
+                offl = ok & (sel != d)
+                st = _consume(st, sel, start, start + dur, ok)
+                link_free = jnp.where(offl, comm_end, link_free)
+                stats = stats._replace(
+                    lp_spawned=stats.lp_spawned + mask,
+                    lp_completed=stats.lp_completed + ok,
+                    lp_failed=stats.lp_failed + (mask & ~ok),
+                    lp_offloaded=stats.lp_offloaded + offl,
+                    lp_four_core=stats.lp_four_core + (ok & use4),
+                    start_delay_sum=stats.start_delay_sum
+                    + jnp.where(ok, start - release, 0.0),
+                    comm_busy=stats.comm_busy + jnp.where(offl, ttime, 0.0),
+                )
+                frame_ok = frame_ok & (ok | (k >= n_lp))
+            stats = stats._replace(
+                frames_completed=stats.frames_completed
+                + (has_frame & frame_ok)
+            )
+        return (st, link_free, stats), None
+
+    xs = (jnp.arange(values.shape[0], dtype=jnp.int32),
+          values.astype(jnp.int32), bw_scale.astype(jnp.float32))
+    (sched, link_free, stats), _ = jax.lax.scan(
+        frame_step, (fleet.sched, fleet.link_free, init_stats(B)), xs
+    )
+    out = FleetState(
+        sched=sched, link_free=link_free,
+        now=jnp.full((B,), values.shape[0] * FRAME_PERIOD, jnp.float32),
+    )
+    return out, stats

@@ -1,0 +1,81 @@
+"""Fleet state: B independent scheduler replicas as one pytree.
+
+`FleetState` stacks `SchedState` (core/jax_state.py) along a leading batch
+axis — every window/link array gains a `[B, ...]` dimension, so the whole
+Monte-Carlo fleet is a valid `jax.lax.scan` carry and a single XLA
+program advances all replicas per tick.
+
+Two fleet-only fields ride along:
+
+    link_free  f32[B]   serial-link FIFO head — the earliest instant a new
+                        offload transfer may start on each replica's WLAN.
+                        The fixed-step engine models the shared 802.11 link
+                        as a serial queue (transfers don't overlap), which
+                        is the paper's §IV.A.2 discretisation collapsed to
+                        its capacity-1 limit; per-replica bandwidth churn
+                        (scenarios.py) scales each transfer's duration.
+    now        f32[B]   per-replica simulation clock (replicas share the
+                        frame grid but keep their own clock so partially
+                        filled batches stay independent).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jax_state import BIG as STATE_BIG  # noqa: F401  (re-export)
+from repro.core.jax_state import SchedState, export_state
+from repro.core.scheduler import RASScheduler
+from repro.core.tasks import ALL_CONFIGS, DEVICE_CORES
+
+
+class FleetState(NamedTuple):
+    sched: SchedState        # every leaf carries a leading [B] axis
+    link_free: jnp.ndarray   # [B]
+    now: jnp.ndarray         # [B]
+
+
+def broadcast_state(st: SchedState, batch: int) -> SchedState:
+    """Tile one replica's SchedState along a new leading batch axis."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (batch,) + x.shape), st
+    )
+
+
+def stack_states(states: list[SchedState]) -> SchedState:
+    """Stack per-replica SchedStates (e.g. mid-run snapshots) into a batch."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def make_fleet(batch: int, n_devices: int = 4, bandwidth_bps: float = 20e6,
+               *, max_windows: int = 16) -> FleetState:
+    """A pristine B-replica fleet: every device fully available from t=0.
+
+    Built by exporting a fresh `RASScheduler` (so window/track/link layout
+    is byte-identical to the reference path) and broadcasting it.
+
+    ``max_windows=16`` (the export default) is calibrated for the fleet
+    scan: the per-tick housekeeping pass recycles elapsed windows, so
+    occupancy never approaches the cap — W=8 yields byte-identical sweep
+    statistics, and doubling W roughly halves replicas/sec on CPU.
+    """
+    base = export_state(
+        RASScheduler(n_devices, bandwidth_bps), max_windows=max_windows
+    )
+    return FleetState(
+        sched=broadcast_state(base, batch),
+        link_free=jnp.zeros((batch,), jnp.float32),
+        now=jnp.zeros((batch,), jnp.float32),
+    )
+
+
+def fleet_shape(fs: FleetState) -> tuple[int, int, int, int, int]:
+    """(B, Dev, CFG, T, W) of a fleet."""
+    return fs.sched.win_t1.shape
+
+
+def track_counts() -> dict[str, int]:
+    return {c.name: DEVICE_CORES // c.cores for c in ALL_CONFIGS}

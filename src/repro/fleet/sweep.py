@@ -1,0 +1,108 @@
+"""Monte-Carlo sweep driver: seed × scenario × congestion grids as batches.
+
+`run_sweep` flattens the grid into replicas (cell = scenario × congestion,
+`n_seeds` replicas per cell), packs replicas into fixed-size batches so
+every `fleet_run` call shares one compiled program, and reduces each
+cell's slice to mean ± 95% CI statistics.  There is **no Python loop over
+replicas** — only over batches, each of which advances up to
+`batch_size` replicas inside a single jitted scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.fleet.engine import FleetParams, fleet_run
+from repro.fleet.metrics import FleetStats, init_stats, summarize
+from repro.fleet.scenarios import make_workload
+from repro.fleet.state import make_fleet
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    scenarios: Sequence[str] = ("uniform", "weighted2")
+    congestion_levels: Sequence[float] = (0.0, 0.3)
+    n_seeds: int = 64                 # replicas per (scenario, congestion)
+    n_frames: int = 95
+    n_devices: int = 4
+    batch_size: int = 256             # replicas advanced per XLA program
+    base_seed: int = 0
+    params: Optional[FleetParams] = None
+
+    def fleet_params(self) -> FleetParams:
+        if self.params is not None:
+            return self.params
+        return FleetParams(n_devices=self.n_devices)
+
+
+def _cells(cfg: SweepConfig):
+    for scen in cfg.scenarios:
+        for cong in cfg.congestion_levels:
+            yield scen, float(cong)
+
+
+def run_sweep(cfg: SweepConfig) -> dict:
+    """Returns {"scenario@congestion": summary} plus a "_sweep" header."""
+    p = cfg.fleet_params()
+    cells = list(_cells(cfg))
+    # Build the full replica population host-side: each cell contributes
+    # n_seeds replica columns keyed by (base_seed, scenario, congestion).
+    vals, bws, owners = [], [], []
+    for ci, (scen, cong) in enumerate(cells):
+        wl = make_workload(
+            scen, cfg.n_seeds, cfg.n_frames, cfg.n_devices,
+            seed=cfg.base_seed + ci, congestion=cong,
+        )
+        vals.append(wl.values)
+        bws.append(wl.bw_scale)
+        owners.extend([ci] * cfg.n_seeds)
+    values = np.concatenate(vals, axis=1)          # [F, Btot, Dev]
+    bw_scale = np.concatenate(bws, axis=1)         # [F, Btot]
+    owners = np.asarray(owners)
+    total = values.shape[1]
+
+    # Fan into fixed-size batches (pad the tail so every launch reuses the
+    # same compiled program; padded replicas are dropped on reduction).
+    bs = min(cfg.batch_size, total) if total else cfg.batch_size
+    pad = (-total) % bs
+    if pad:
+        values = np.concatenate([values, values[:, :pad]], axis=1)
+        bw_scale = np.concatenate([bw_scale, bw_scale[:, :pad]], axis=1)
+    per_replica: list[FleetStats] = []
+    for b0 in range(0, values.shape[1], bs):
+        fleet = make_fleet(bs, cfg.n_devices)
+        _, stats = fleet_run(
+            fleet,
+            values[:, b0:b0 + bs],
+            bw_scale[:, b0:b0 + bs],
+            params=p,
+        )
+        per_replica.append(jax_to_np(stats))
+    merged = FleetStats(*(
+        np.concatenate([getattr(s, f) for s in per_replica])[:total]
+        for f in FleetStats._fields
+    ))
+
+    out = {
+        "_sweep": {
+            "cells": [f"{s}@{c:g}" for s, c in cells],
+            "n_seeds": cfg.n_seeds,
+            "n_frames": cfg.n_frames,
+            "total_replicas": int(total),
+            "batch_size": bs,
+        }
+    }
+    for ci, (scen, cong) in enumerate(cells):
+        sel = owners == ci
+        cell_stats = FleetStats(
+            *(getattr(merged, f)[sel] for f in FleetStats._fields)
+        )
+        out[f"{scen}@{cong:g}"] = summarize(cell_stats, cfg.n_frames)
+    return out
+
+
+def jax_to_np(stats: FleetStats) -> FleetStats:
+    return FleetStats(*(np.asarray(x) for x in stats))

@@ -20,3 +20,26 @@ def window_query_op(t1, t2, valid, q1, deadline, dur, *, force_kernel=False,
             interpret=interpret or not on_tpu(),
         )
     return window_query_ref(t1, t2, valid, q1, deadline, dur)
+
+
+def window_query_batched_op(t1, t2, valid, q1, deadline, dur, *,
+                            backend: str = "auto"):
+    """Fleet-batched dispatch — the single source of the backend policy
+    (the fleet engine routes through here).
+
+    backend: "auto" → Pallas kernel on TPU, jnp oracle elsewhere;
+    "kernel" → force the kernel (interpret mode off-TPU); "ref" → force
+    the jnp oracle.
+    """
+    from repro.kernels.window_query.ref import window_query_batched_ref
+    from repro.kernels.window_query.window_query import window_query_batched
+
+    if backend == "auto":
+        backend = "kernel" if on_tpu() else "ref"
+    if backend == "kernel":
+        return window_query_batched(
+            t1, t2, valid, q1, deadline, dur, interpret=not on_tpu()
+        )
+    if backend != "ref":
+        raise ValueError(f"unknown window-query backend: {backend!r}")
+    return window_query_batched_ref(t1, t2, valid, q1, deadline, dur)

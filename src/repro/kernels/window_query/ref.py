@@ -15,3 +15,20 @@ def window_query_ref(t1, t2, valid, q1, deadline, dur):
     key = jnp.where(feasible, start, BIG).reshape(t1.shape[0], -1)
     best = jnp.min(key, axis=1)
     return (best < BIG).astype(jnp.int32), best
+
+
+def window_query_batched_ref(t1, t2, valid, q1, deadline, dur):
+    """Batched oracle.  t1,t2,valid: [B,Dev,T,W]; q1/deadline/dur scalars or
+    broadcastable to [B,Dev] -> (found [B,Dev] i32, start [B,Dev] f32)."""
+    B, Dev = t1.shape[:2]
+    q1 = jnp.broadcast_to(jnp.asarray(q1, jnp.float32), (B, Dev))
+    deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float32), (B, Dev))
+    dur = jnp.broadcast_to(jnp.asarray(dur, jnp.float32), (B, Dev))
+    start = jnp.maximum(t1, q1[..., None, None])
+    feasible = valid.astype(bool) & (
+        start + dur[..., None, None]
+        <= jnp.minimum(t2, deadline[..., None, None])
+    )
+    key = jnp.where(feasible, start, BIG).reshape(B, Dev, -1)
+    best = jnp.min(key, axis=-1)
+    return (best < BIG).astype(jnp.int32), best

@@ -82,3 +82,79 @@ def window_query(t1, t2, valid, q1, deadline, dur, *, block_dev: int = 256,
         interpret=interpret,
     )(t1f, t2f, vf)
     return found[:Dev], start[:Dev]
+
+
+# ---------------------------------------------------------------------------
+# batched (fleet) variant
+# ---------------------------------------------------------------------------
+
+def _batched_query_kernel(q1_ref, dl_ref, dur_ref, t1_ref, t2_ref, valid_ref,
+                          start_ref, found_ref):
+    """One (replica, device-block) tile of the fleet query.
+
+    Unlike the unbatched kernel the query parameters are *data* — q1,
+    deadline and dur vary per (replica, device), which is what lets a
+    single launch answer comm-adjusted offload queries for a whole
+    Monte-Carlo fleet (remote devices query from their transfer-landing
+    time, the source device from `now`)."""
+    t1 = t1_ref[0]                          # [bd, TW]
+    t2 = t2_ref[0]
+    valid = valid_ref[0]
+    q1 = q1_ref[0][:, None]                 # [bd, 1]
+    deadline = dl_ref[0][:, None]
+    dur = dur_ref[0][:, None]
+    start = jnp.maximum(t1, q1)
+    feasible = (valid != 0) & (start + dur <= jnp.minimum(t2, deadline))
+    key = jnp.where(feasible, start, BIG)
+    best = jnp.min(key, axis=1)             # [bd]
+    start_ref[0, :] = best
+    found_ref[0, :] = (best < BIG).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_dev", "interpret"))
+def window_query_batched(t1, t2, valid, q1, deadline, dur, *,
+                         block_dev: int = 256, interpret: bool = False):
+    """Fleet-batched multi-containment query.
+
+    t1, t2: [B, Dev, T, W] f32; valid: [B, Dev, T, W] (bool/int);
+    q1, deadline, dur: scalars or broadcastable to [B, Dev] f32.
+    Returns (found [B, Dev] i32, start [B, Dev] f32).
+
+    Grid is (B, device-blocks): every replica × device-block tile is one
+    VPU pass, so the whole fleet's §IV.B.2 query is a single kernel
+    launch.  VMEM per tile: 3 · block_dev · T·W · 4 B plus the three
+    [block_dev] parameter rows.
+    """
+    B, Dev, T, W = t1.shape
+    t1f = t1.reshape(B, Dev, T * W)
+    t2f = t2.reshape(B, Dev, T * W)
+    vf = valid.reshape(B, Dev, T * W).astype(jnp.int32)
+    q1 = jnp.broadcast_to(jnp.asarray(q1, jnp.float32), (B, Dev))
+    deadline = jnp.broadcast_to(jnp.asarray(deadline, jnp.float32), (B, Dev))
+    dur = jnp.broadcast_to(jnp.asarray(dur, jnp.float32), (B, Dev))
+    block_dev = min(block_dev, Dev)
+    pad = (-Dev) % block_dev
+    if pad:
+        t1f = jnp.pad(t1f, ((0, 0), (0, pad), (0, 0)), constant_values=BIG)
+        t2f = jnp.pad(t2f, ((0, 0), (0, pad), (0, 0)), constant_values=-BIG)
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
+        q1 = jnp.pad(q1, ((0, 0), (0, pad)))
+        deadline = jnp.pad(deadline, ((0, 0), (0, pad)))
+        dur = jnp.pad(dur, ((0, 0), (0, pad)), constant_values=BIG)
+    Dp = t1f.shape[1]
+    n = Dp // block_dev
+
+    win_spec = pl.BlockSpec((1, block_dev, T * W), lambda b, i: (b, i, 0))
+    par_spec = pl.BlockSpec((1, block_dev), lambda b, i: (b, i))
+    start, found = pl.pallas_call(
+        _batched_query_kernel,
+        grid=(B, n),
+        in_specs=[par_spec, par_spec, par_spec, win_spec, win_spec, win_spec],
+        out_specs=[par_spec, par_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Dp), jnp.float32),
+            jax.ShapeDtypeStruct((B, Dp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q1, deadline, dur, t1f, t2f, vf)
+    return found[:, :Dev], start[:, :Dev]

@@ -424,10 +424,9 @@ class Simulation:
         else:
             for dev in self.sched.devices:
                 for al in dev.lists.values():
-                    for track in al.tracks:
-                        stale = [w for w in track if w.t2 <= t]
-                        for w in stale:
-                            track.remove(w)
+                    al.tracks = [
+                        [w for w in track if w.t2 > t] for track in al.tracks
+                    ]
                 dev.prune(t)
 
 

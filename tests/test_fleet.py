@@ -1,0 +1,260 @@
+"""Fleet subsystem tests: batched Pallas window-query equivalence (vs the
+unbatched kernel, the jnp oracle and the Python AvailabilityList
+reference, including the device-padding path), engine invariants,
+scenario registry and sweep plumbing.
+
+All `fleet_run` invocations share one shape/params signature so the
+whole module pays for a single XLA compilation.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.jax_state import export_state
+from repro.core.scheduler import RASScheduler
+from repro.core.tasks import LP2_CONFIG, LPRequest, Priority, Task
+from repro.fleet import (
+    FleetParams,
+    fleet_run,
+    make_fleet,
+    make_workload,
+    run_sweep,
+    scenario_names,
+    stack_states,
+    summarize,
+    SweepConfig,
+)
+from repro.kernels.window_query.ref import (
+    window_query_batched_ref,
+    window_query_ref,
+)
+from repro.kernels.window_query.window_query import (
+    window_query,
+    window_query_batched,
+)
+
+# One signature for every engine call in this module (single compile).
+B, F, DEV = 8, 8, 4
+PARAMS = FleetParams(n_devices=DEV)
+
+
+def _random_windows(b, dev, t, w, seed=0):
+    rng = np.random.default_rng(seed)
+    t1 = rng.uniform(0, 60, (b, dev, t, w)).astype(np.float32)
+    t2 = (t1 + rng.uniform(0, 40, (b, dev, t, w))).astype(np.float32)
+    valid = rng.random((b, dev, t, w)) < 0.7
+    return t1, t2, valid
+
+
+# ---------------------------------------------------------------------------
+# batched kernel equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dev,block_dev", [(4, 4), (6, 4), (5, 4), (3, 8)],
+                         ids=["exact", "pad2", "pad3", "clamp"])
+def test_batched_kernel_matches_unbatched(dev, block_dev):
+    """Each replica row of the batched kernel must equal the unbatched
+    kernel run on that replica — including when Dev is not divisible by
+    block_dev (padding path) and when block_dev > Dev (clamp path)."""
+    t1, t2, valid = _random_windows(5, dev, 2, 8, seed=dev)
+    q1, dl, dur = 10.0, 70.0, 6.0
+    fb, sb = window_query_batched(
+        t1, t2, valid, q1, dl, dur, block_dev=block_dev, interpret=True
+    )
+    for b in range(t1.shape[0]):
+        fu, su = window_query(
+            t1[b], t2[b], valid[b], q1, dl, dur,
+            block_dev=block_dev, interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(fb[b]), np.asarray(fu))
+        np.testing.assert_allclose(np.asarray(sb[b]), np.asarray(su),
+                                   rtol=1e-6)
+
+
+def test_batched_kernel_matches_ref_per_replica_params():
+    """Per-(replica, device) q1/deadline/dur — the comm-adjusted offload
+    query — must match the jnp oracle."""
+    t1, t2, valid = _random_windows(6, 5, 2, 8, seed=9)
+    rng = np.random.default_rng(3)
+    q1 = rng.uniform(0, 30, (6, 5)).astype(np.float32)
+    dl = q1 + rng.uniform(20, 60, (6, 5)).astype(np.float32)
+    dur = rng.uniform(1, 10, (6, 5)).astype(np.float32)
+    fk, sk = window_query_batched(
+        t1, t2, valid, q1, dl, dur, block_dev=4, interpret=True
+    )
+    fr, sr = window_query_batched_ref(t1, t2, valid, q1, dl, dur)
+    np.testing.assert_array_equal(np.asarray(fk), np.asarray(fr))
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+
+
+def _loaded_sched(seed, n_req=3):
+    s = RASScheduler(4, 20e6, seed=seed)
+    rng = np.random.default_rng(seed)
+    for i in range(n_req):
+        t = float(rng.uniform(0, 30))
+        req = LPRequest(
+            [Task(Priority.LOW, i % 4, t, t + 60.0, 0) for _ in range(2)],
+            i % 4, t,
+        )
+        s.schedule_lp(req, t)
+    return s
+
+
+@pytest.mark.parametrize("seeds", [(0, 3), (5, 9)])
+def test_batched_kernel_matches_python_availability(seeds):
+    """A stacked batch of live schedulers queried by the kernel must agree
+    with AvailabilityList.find_slot on every (replica, device)."""
+    scheds = [_loaded_sched(s) for s in seeds]
+    batch = stack_states([export_state(s) for s in scheds])
+    ci = 1  # lp2
+    q1, dl = 35.0, 95.0
+    dur = LP2_CONFIG.padded_time
+    fk, sk = window_query_batched(
+        batch.win_t1[:, :, ci], batch.win_t2[:, :, ci],
+        batch.win_valid[:, :, ci], q1, dl, dur,
+        block_dev=4, interpret=True,
+    )
+    for b, s in enumerate(scheds):
+        for d, dev in enumerate(s.devices):
+            py = dev.list_for(LP2_CONFIG).find_slot(q1, dl, dur)
+            assert bool(fk[b, d]) == (py is not None)
+            if py is not None:
+                assert abs(float(sk[b, d]) - py[2]) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fleet_result():
+    wl = make_workload("uniform", B, F, DEV, seed=0, congestion=0.1)
+    fleet = make_fleet(B, DEV)
+    out, stats = fleet_run(fleet, wl.values, wl.bw_scale, params=PARAMS)
+    return wl, out, stats
+
+
+def test_fleet_run_invariants(fleet_result):
+    wl, out, stats = fleet_result
+    frames = np.asarray(stats.frames)
+    assert (frames == (wl.values >= 0).sum(axis=(0, 2))).all()
+    assert (np.asarray(stats.lp_spawned)
+            == np.asarray(stats.lp_completed)
+            + np.asarray(stats.lp_failed)).all()
+    assert (np.asarray(stats.frames_completed) <= frames).all()
+    assert (np.asarray(stats.lp_offloaded)
+            <= np.asarray(stats.lp_completed)).all()
+    assert (np.asarray(stats.hp_completed) == frames).all()
+    # link FIFO time never decreases from its start
+    assert (np.asarray(out.link_free) >= 0).all()
+
+
+def test_fleet_run_deterministic(fleet_result):
+    wl, _, stats = fleet_result
+    fleet = make_fleet(B, DEV)
+    _, stats2 = fleet_run(fleet, wl.values, wl.bw_scale, params=PARAMS)
+    for a, b in zip(stats, stats2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fleet_summary_fields(fleet_result):
+    _, _, stats = fleet_result
+    s = summarize(stats, F)
+    assert s["replicas"] == B
+    for key in ("frame_completion_rate", "lp_violation_rate",
+                "lp_throughput_per_s"):
+        assert set(s[key]) == {"mean", "ci95"}
+        assert s[key]["mean"] >= 0.0
+
+
+def test_empty_workload_places_nothing():
+    values = np.full((F, B, DEV), -1, np.int8)
+    bw = np.ones((F, B), np.float32)
+    fleet = make_fleet(B, DEV)
+    _, stats = fleet_run(fleet, jnp.asarray(values), jnp.asarray(bw),
+                         params=PARAMS)
+    assert int(np.asarray(stats.frames).sum()) == 0
+    assert int(np.asarray(stats.lp_spawned).sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# scenarios
+# ---------------------------------------------------------------------------
+
+def test_scenario_registry_contents():
+    names = scenario_names()
+    for expected in ("uniform", "weighted1", "weighted4", "poisson_burst",
+                     "diurnal", "mobility"):
+        assert expected in names
+
+
+@pytest.mark.parametrize("name", sorted(scenario_names()))
+def test_scenario_shapes_and_alphabet(name):
+    wl = make_workload(name, 6, 12, DEV, seed=1, congestion=0.2)
+    assert wl.values.shape == (12, 6, DEV)
+    assert wl.values.dtype == np.int8
+    assert wl.bw_scale.shape == (12, 6)
+    assert wl.values.min() >= -1 and wl.values.max() <= 4
+    assert (wl.bw_scale > 0).all() and (wl.bw_scale <= 1.2).all()
+
+
+def test_scenario_reproducible_and_seed_sensitive():
+    a = make_workload("poisson_burst", 4, 10, DEV, seed=5)
+    b = make_workload("poisson_burst", 4, 10, DEV, seed=5)
+    c = make_workload("poisson_burst", 4, 10, DEV, seed=6)
+    np.testing.assert_array_equal(a.values, b.values)
+    assert not np.array_equal(a.values, c.values)
+
+
+def test_congestion_scales_bandwidth_down():
+    clean = make_workload("uniform", 16, 30, DEV, seed=2, congestion=0.0)
+    busy = make_workload("uniform", 16, 30, DEV, seed=2, congestion=0.5)
+    assert busy.bw_scale.mean() < clean.bw_scale.mean()
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        make_workload("nope", 2, 4, DEV)
+
+
+# ---------------------------------------------------------------------------
+# sweep
+# ---------------------------------------------------------------------------
+
+def test_sweep_grid_and_batching():
+    """2 scenarios × 2 congestion × 2 seeds = 8 replicas in one batch of 8
+    (reuses the module's compiled engine signature)."""
+    cfg = SweepConfig(
+        scenarios=("uniform", "mobility"),
+        congestion_levels=(0.0, 0.4),
+        n_seeds=2, n_frames=F, n_devices=DEV, batch_size=B,
+        params=PARAMS,
+    )
+    out = run_sweep(cfg)
+    assert out["_sweep"]["total_replicas"] == 8
+    cells = [k for k in out if k != "_sweep"]
+    assert sorted(cells) == sorted(
+        ["uniform@0", "uniform@0.4", "mobility@0", "mobility@0.4"]
+    )
+    for c in cells:
+        assert out[c]["replicas"] == 2
+
+
+def test_sweep_pads_ragged_tail():
+    """5 seeds × 2 cells = 10 replicas > batch_size 8 -> two batches of 8
+    with a 6-replica pad on the tail; padded replicas must not leak into
+    the per-cell reduction (both batches reuse the module's compiled
+    B=8 signature)."""
+    cfg = SweepConfig(
+        scenarios=("uniform",),
+        congestion_levels=(0.0, 0.6),
+        n_seeds=5, n_frames=F, n_devices=DEV, batch_size=B,
+        params=PARAMS,
+    )
+    out = run_sweep(cfg)
+    assert out["_sweep"]["total_replicas"] == 10
+    assert out["_sweep"]["batch_size"] == B
+    assert out["uniform@0"]["replicas"] == 5
+    assert out["uniform@0.6"]["replicas"] == 5

@@ -1,7 +1,7 @@
 """Behaviour tests for the RAS scheduler and WPS baseline (§IV.B)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.scheduler import RASScheduler
 from repro.core.tasks import (
