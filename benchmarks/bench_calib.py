@@ -1,0 +1,126 @@
+"""Fleet-vs-serial calibration bench + CI regression gate.
+
+Runs matched (seed, scenario, congestion) points through the serial DES
+and the batched fleet engine (repro.calib), writes
+results/calib/calib_report.json, and checks every per-cell delta against
+the committed tolerance file results/calib/baseline.json.
+
+As a CLI this is the CI gate: a non-zero exit means the fleet abstraction
+drifted past its committed tolerance band on at least one cell.
+
+    PYTHONPATH=src python -m benchmarks.bench_calib --quick          # gate
+    PYTHONPATH=src python -m benchmarks.bench_calib --rebaseline     # re-pin
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import csv_row
+from repro.calib import (
+    CalibConfig,
+    check_report,
+    load_baseline,
+    run_calibration,
+    save_report,
+    write_baseline,
+)
+from repro.calib.harness import PAPER_TRACES
+
+
+def _config(quick: bool) -> CalibConfig:
+    # Quick keeps every paper trace (the gate must cover all of them) but
+    # trims frames/seeds; CI runs this.  Full adds a congested column.
+    if quick:
+        return CalibConfig(scenarios=PAPER_TRACES, congestion_levels=(0.0,),
+                           n_seeds=2, n_frames=40)
+    return CalibConfig(scenarios=PAPER_TRACES, congestion_levels=(0.0, 0.3),
+                       n_seeds=3, n_frames=95)
+
+
+def run(*, quick: bool = False, baseline_path: str | None = None) -> dict:
+    cfg = _config(quick)
+    t0 = time.time()
+    report = run_calibration(cfg)
+    elapsed = time.time() - t0
+    path = save_report(report)
+
+    for cell, point in sorted(report["cells"].items()):
+        csv_row(f"calib_{cell}", elapsed / max(len(report['cells']), 1) * 1e6,
+                f"max_abs_delta_{point['max_abs_delta']}")
+
+    try:
+        baseline = load_baseline(baseline_path)
+    except FileNotFoundError:
+        # the tolerance file is committed — its absence means a broken
+        # checkout or cwd, and a gate that cannot gate must not pass
+        baseline = None
+    if baseline is None:
+        gate_ok, failures = False, [
+            "baseline file not found (expected results/calib/baseline.json "
+            "relative to the repo root) — run from the repo root or "
+            "regenerate with --rebaseline"
+        ]
+    else:
+        gate_ok, failures = check_report(report, baseline)
+    return {
+        "report": report,
+        "report_path": path,
+        "elapsed_s": round(elapsed, 1),
+        "gate_ok": gate_ok,
+        "gate_failures": failures,
+        "baseline_found": baseline is not None,
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer seeds/frames, no congested column (CI mode)")
+    ap.add_argument("--baseline", default=None,
+                    help="tolerance file (default results/calib/baseline.json)")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="report only; always exit 0")
+    ap.add_argument("--rebaseline", action="store_true",
+                    help="write a fresh tolerance file derived from BOTH "
+                         "the quick and the full grid (so the bands admit "
+                         "every gated configuration) instead of gating")
+    args = ap.parse_args(argv)
+
+    if args.rebaseline:
+        # the committed bands must admit the quick CI gate (40 frames,
+        # 2 seeds, congestion 0) AND the full bench grid (95 frames,
+        # 3 seeds, congestion 0/0.3): derive from the union of both, so
+        # a quick-only baseline can never spuriously fail the full run
+        quick_rep = run(quick=True)["report"]
+        full_rep = run(quick=False)["report"]
+        merged = dict(full_rep)
+        merged["_config"] = {
+            **full_rep["_config"],
+            "derived_from": "union of quick and full grids "
+                            "(bench_calib --rebaseline)",
+        }
+        merged["cells"] = {
+            **full_rep["cells"],
+            **{f"quick_{k}": v for k, v in quick_rep["cells"].items()},
+        }
+        base = write_baseline(merged, args.baseline)
+        print(f"# wrote baseline tolerances: {base['tolerances']}")
+        print(f"# congested overrides: {base['overrides']}")
+        return 0
+
+    out = run(quick=args.quick, baseline_path=args.baseline)
+    if out["gate_ok"]:
+        print(f"# calib gate OK ({len(out['report']['cells'])} cells, "
+              f"{out['elapsed_s']}s)")
+        return 0
+    print("# calib gate FAILED:")
+    for f in out["gate_failures"]:
+        print(f"#   {f}")
+    return 0 if args.no_gate else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,56 +1,130 @@
 """Benchmark harness entry point — one benchmark per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (one per benchmark) and
-writes full JSON to results/bench/.
+writes full JSON to results/bench/ (plus results/calib/ for the
+fleet-vs-serial calibration report).
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run --list   # enumerate benches
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
+from typing import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSpec:
+    """A registered benchmark: lazy import keeps --list instant."""
+
+    name: str
+    description: str
+    run: Callable[[argparse.Namespace], dict]
+
+
+def _completion(a):
+    from benchmarks import bench_completion
+    return bench_completion.run(n_frames=a.n_frames, seeds=a.seeds)
+
+
+def _latency(a):
+    from benchmarks import bench_latency
+    return bench_latency.run(n_frames=a.n_frames)
+
+
+def _bw_interval(a):
+    from benchmarks import bench_bw_interval
+    return bench_bw_interval.run(n_frames=a.n_frames, seeds=a.seeds)
+
+
+def _congestion(a):
+    from benchmarks import bench_congestion
+    return bench_congestion.run(n_frames=a.n_frames, seeds=a.seeds)
+
+
+def _query(a):
+    from benchmarks import bench_query
+    return bench_query.run() or {}
+
+
+def _fleet(a):
+    from benchmarks import bench_fleet
+    return bench_fleet.run(quick=a.quick)
+
+
+def _calib(a):
+    from benchmarks import bench_calib
+    return bench_calib.run(quick=a.quick)
+
+
+def _roofline(a):
+    from benchmarks import roofline
+    return roofline.run() or {}
+
+
+#: Execution order matters: paper figures first, then kernels/fleet/calib.
+REGISTRY: tuple[BenchSpec, ...] = (
+    BenchSpec("completion", "Fig. 4 frame-completion vs trace family "
+              "(RAS / WPS / hybrid)", _completion),
+    BenchSpec("latency", "Fig. 5 scheduling-latency breakdown by scenario",
+              _latency),
+    BenchSpec("bw_interval", "Fig. 7 completion vs bandwidth-probe interval",
+              _bw_interval),
+    BenchSpec("congestion", "Fig. 8 completion under §VI.C link congestion",
+              _congestion),
+    BenchSpec("query", "Pallas window-query kernel vs jnp oracle microbench",
+              _query),
+    BenchSpec("fleet", "batched fleet engine replicas/sec vs serial DES",
+              _fleet),
+    BenchSpec("calib", "fleet-vs-serial calibration deltas + tolerance gate",
+              _calib),
+    BenchSpec("roofline", "HLO FLOP/byte roofline of the model zoo",
+              _roofline),
+)
+
+#: Benches whose result dict carries a ``paper_checks`` table.
+PAPER_CHECK_BENCHES = {"completion": "fig4", "latency": "fig5",
+                      "bw_interval": "fig7", "congestion": "fig8"}
+
+
+def list_benches() -> None:
+    width = max(len(b.name) for b in REGISTRY)
+    for b in REGISTRY:
+        print(f"{b.name:<{width}}  {b.description}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer seeds/frames (CI mode)")
+    ap.add_argument("--list", action="store_true",
+                    help="enumerate registered benchmarks and exit")
     args = ap.parse_args()
-    n_frames = 40 if args.quick else 95
-    seeds = (7,) if args.quick else (7, 11, 23)
+    if args.list:
+        list_benches()
+        return
+    args.n_frames = 40 if args.quick else 95
+    args.seeds = (7,) if args.quick else (7, 11, 23)
 
     print("name,us_per_call,derived")
     t0 = time.time()
-
-    from benchmarks import bench_completion
-    r1 = bench_completion.run(n_frames=n_frames, seeds=seeds)
-
-    from benchmarks import bench_latency
-    r2 = bench_latency.run(n_frames=n_frames)
-
-    from benchmarks import bench_bw_interval
-    r3 = bench_bw_interval.run(n_frames=n_frames, seeds=seeds)
-
-    from benchmarks import bench_congestion
-    r4 = bench_congestion.run(n_frames=n_frames, seeds=seeds)
-
-    from benchmarks import bench_query
-    bench_query.run()
-
-    from benchmarks import bench_fleet
-    r5 = bench_fleet.run(quick=args.quick)
-
-    from benchmarks import roofline
-    roofline.run()
+    results = {}
+    for spec in REGISTRY:
+        results[spec.name] = spec.run(args)
 
     all_checks = {}
-    for name, r in (("fig4", r1), ("fig5", r2), ("fig7", r3), ("fig8", r4)):
-        for k, v in r["paper_checks"].items():
-            all_checks[f"{name}.{k}"] = bool(v)
-    all_checks["fleet.speedup_10x_at_b256"] = bool(r5["meets_10x_bar"])
+    for bench, fig in PAPER_CHECK_BENCHES.items():
+        for k, v in results[bench]["paper_checks"].items():
+            all_checks[f"{fig}.{k}"] = bool(v)
+    all_checks["fleet.speedup_10x_at_b256"] = bool(
+        results["fleet"]["meets_10x_bar"]
+    )
+    all_checks["calib.within_tolerance"] = bool(results["calib"]["gate_ok"])
     n_ok = sum(all_checks.values())
     print(f"# paper-claim checks: {n_ok}/{len(all_checks)} passed "
           f"({time.time() - t0:.1f}s total)")

@@ -1,0 +1,33 @@
+"""Fleet-vs-serial calibration harness.
+
+Runs matched (seed, scenario, congestion) points through both the serial
+discrete-event simulator (sim/) and the batched fleet engine (fleet/),
+reduces each side to a shared set of rates, and reports per-scenario
+deltas.  gate.py turns a committed tolerance file
+(results/calib/baseline.json) into a pass/fail regression gate used by
+CI (benchmarks/bench_calib.py).
+"""
+
+from repro.calib.gate import (
+    check_report,
+    load_baseline,
+    save_report,
+    write_baseline,
+)
+from repro.calib.harness import (
+    CalibConfig,
+    fleet_view,
+    run_calibration,
+    run_point,
+)
+
+__all__ = [
+    "CalibConfig",
+    "check_report",
+    "fleet_view",
+    "load_baseline",
+    "run_calibration",
+    "run_point",
+    "save_report",
+    "write_baseline",
+]

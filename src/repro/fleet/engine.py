@@ -6,12 +6,35 @@ but one replica per Python process.  This engine trades event granularity
 for throughput: a `jax.lax.scan` over frame periods advances **every
 replica of a Monte-Carlo fleet at once**, with the per-tick pipeline
 
-    housekeeping → frame release → HP placement → LP placement → accounting
+    housekeeping → victim re-queue → frame release → HP placement
+                 → LP placement → accounting
 
 entirely inside one jitted program.  Placement reuses the §IV data
 structures of core/jax_state.py — the multi-containment query runs through
 the batched Pallas window-query kernel (one launch for the whole fleet)
 and commits through `_bisect`'s fan-out write under `vmap`.
+
+Preemption fidelity (§IV.B.3): each device carries a one-deep *victim
+cache* of its most recently committed LP placement.  The serial engine
+evicts the overlapping LP task with the farthest deadline; deadlines grow
+with release time, so the newest commit is that victim whenever its
+reserved slot overlaps the requested HP window (older overlapping tasks
+are invisible to the one-deep cache).  When the HP containment query
+misses:
+
+- the cached victim overlaps [now, now+dur) → *committed preemption*: the
+  victim loses its completion credit, gets one immediate reallocation
+  attempt at HP-commit time (the serial §VI.A path), and on failure
+  enters the bounded re-queue buffer; HP runs either way.
+- no overlapping victim → HP **fails admission** (the serial engine's
+  ``no-preemptable`` path) and the frame dies — occasionally spuriously,
+  when only an older-than-cached task overlapped.
+
+The per-tick re-queue pass re-places buffered victims through the same
+two-config window semantics (source preference, transfer gating) before
+new frames are released; a victim whose deadline can no longer fit even
+the 4-core config is dropped and counted as ``missed_by_preemption``
+(as is a victim arriving to a full buffer).
 
 Fidelity contract (what the abstraction keeps / drops):
 
@@ -19,16 +42,21 @@ Fidelity contract (what the abstraction keeps / drops):
   task completes by its deadline — violations surface as placement
   failures), 2-core-preferred / 4-core-fallback LP configs, source-device
   preference, serial-link transfer queueing, per-replica bandwidth churn,
-  HP preemption as capacity eviction (HP always runs; a missing reserved
-  gap consumes LP availability and is counted as a preemption).
-- drops: controller queueing latency, run-time jitter, and per-victim
-  reallocation latency (committed LP placements keep their completion
-  credit — the serial engine's reallocation path succeeds in the common
-  case, so this biases completion slightly up under extreme preemption).
+  HP preemption with single-victim eviction + re-queue + deadline-expiry
+  drops, HP admission failure when nothing is preemptable.
+- drops: controller queueing latency, run-time jitter, per-victim
+  reallocation latency (the immediate attempt is instantaneous; buffered
+  retries happen at tick granularity), depth of the victim pool (one
+  cached commit per device — older overlapping tasks cannot be evicted,
+  so some preemptions become spurious admission failures), and
+  retroactive frame accounting (a frame whose LP task is later preempted
+  keeps its placement-time completion credit; the victim itself is
+  re-accounted exactly).  calib/ quantifies the net drift per scenario.
 
 Use the serial engine for paper-figure replication; use the fleet for
 scenario sweeps at scale (sweep.py fans seed × scenario × congestion
-grids into batches).
+grids into batches); use calib/ to quantify the divergence between the
+two on matched traces.
 """
 
 from __future__ import annotations
@@ -61,6 +89,9 @@ class FleetParams:
     stagger: float = 1.0
     #: window_query_batched_op backend: "auto" | "kernel" | "ref".
     query_backend: str = "auto"
+    #: width of the per-replica victim re-queue buffer (0 disables the
+    #: reallocation pass and reverts to capacity-eviction-only preemption).
+    requeue_slots: int = 4
 
 
 def _query(st: SchedState, cfg_idx: int, q1, deadline, dur, p: FleetParams):
@@ -103,6 +134,54 @@ def _consume(st: SchedState, dev, s, e, do):
     return jax.tree_util.tree_map(pick, new, st)
 
 
+def _place_lp(st: SchedState, q1, dl, src, p: FleetParams):
+    """One batched §IV.B.2 placement attempt: 2-core preferred, 4-core
+    fallback, source-device preference, earliest start.
+
+    q1/dl are [B, Dev] (transfer-adjusted release / deadline), ``src`` is
+    the [B] source device.  Returns (ok, sel, start, dur, use4), all [B].
+    """
+    B, n_dev = q1.shape
+    dev_ids = jnp.arange(n_dev)
+    ok_c, start_c, dur_c = [], [], []
+    for ci in (LP2_IDX, LP4_IDX):
+        dur = st.min_dur[:, ci]
+        found, starts = _query(
+            st, ci, q1, dl, jnp.broadcast_to(dur[:, None], (B, n_dev)), p
+        )
+        # prefer the source device, then earliest start
+        key = jnp.where(found.astype(bool), starts, BIG)
+        key = key - jnp.where(dev_ids[None, :] == src[:, None], 1e-3, 0.0)
+        sel = jnp.argmin(key, axis=1)
+        ok_c.append(jnp.take_along_axis(
+            found.astype(bool), sel[:, None], axis=1)[:, 0])
+        start_c.append(jnp.take_along_axis(
+            starts, sel[:, None], axis=1)[:, 0])
+        dur_c.append((dur, sel))
+    # §IV.B.2: 2-core preferred; widen to 4 cores only when the deadline
+    # would otherwise be violated
+    use4 = ~ok_c[0] & ok_c[1]
+    ok = ok_c[0] | ok_c[1]
+    sel = jnp.where(use4, dur_c[1][1], dur_c[0][1])
+    start = jnp.where(use4, start_c[1], start_c[0])
+    dur = jnp.where(use4, dur_c[1][0], dur_c[0][0])
+    return ok, sel, start, dur, use4
+
+
+def _vc_commit(vc, ok, sel, start, end, deadline, src):
+    """Record a committed LP placement in the per-device victim cache."""
+    vc_s, vc_end, vc_dl, vc_src, vc_ok = vc
+    n_dev = vc_end.shape[1]
+    hit = ok[:, None] & (jnp.arange(n_dev)[None, :] == sel[:, None])
+    return (
+        jnp.where(hit, start[:, None], vc_s),
+        jnp.where(hit, end[:, None], vc_end),
+        jnp.where(hit, deadline[:, None], vc_dl),
+        jnp.where(hit, src[:, None], vc_src),
+        vc_ok | hit,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("params",))
 def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
               *, params: FleetParams) -> tuple[FleetState, FleetStats]:
@@ -112,17 +191,77 @@ def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
     p = params
     B = fleet.sched.win_t1.shape[0]
     n_dev = p.n_devices
+    R = p.requeue_slots
     assert values.shape[2] == n_dev and fleet.sched.win_t1.shape[1] == n_dev
+    assert fleet.rq_valid.shape == (B, R), (
+        f"fleet re-queue buffer {fleet.rq_valid.shape} != (B={B}, "
+        f"requeue_slots={R}); build the fleet with matching requeue_slots"
+    )
     dev_ids = jnp.arange(n_dev)
+    rows = jnp.arange(B)
 
     def frame_step(carry, xs):
-        st, link_free, stats = carry
+        st, link_free, rq, vc, stats = carry
+        rq_dl, rq_src, rq_ok = rq
+        vc_s, vc_end, vc_dl, vc_src, vc_ok = vc
         f, v, bws = xs                       # f i32, v [B,Dev] i32, bws [B]
         base = f.astype(jnp.float32) * FRAME_PERIOD
         # housekeeping: recycle slots of fully-elapsed windows so the
         # fixed-W arrays never clog (the batched analog of the serial
         # engine's per-frame stale-window prune)
         st = st._replace(win_valid=st.win_valid & (st.win_t2 > base))
+
+        ttime = (p.transfer_bytes * 8.0) / (
+            p.nominal_bw_bps * jnp.maximum(bws, 1e-3)
+        )
+
+        # -- victim re-queue pass (§IV.B.3 reallocation) -------------------
+        # Runs before this tick's frame releases so victims get first pick
+        # of the capacity they lost.  A victim whose deadline cannot fit
+        # even the 4-core config any more is dropped as missed.
+        now0 = jnp.full((B,), 0.0, jnp.float32) + base
+        min_lp_dur = jnp.minimum(st.min_dur[:, LP2_IDX], st.min_dur[:, LP4_IDX])
+        if R > 0:
+            # drop every victim whose deadline cannot fit even the 4-core
+            # config any more (vectorised over all slots; no query needed)
+            expired = rq_ok & (now0[:, None] + min_lp_dur[:, None] > rq_dl)
+            rq_ok = rq_ok & ~expired
+            stats = stats._replace(
+                missed_by_preemption=stats.missed_by_preemption
+                + expired.sum(axis=1, dtype=jnp.int32)
+            )
+            # one placement attempt per tick for the earliest-deadline
+            # survivor (buffered victims rarely outlive a frame period, so
+            # one attempt per tick drains the buffer in practice while
+            # costing a single window query pass)
+            slot = jnp.argmin(jnp.where(rq_ok, rq_dl, BIG), axis=1)
+            valid_r = rq_ok[rows, slot]
+            dl = rq_dl[rows, slot]
+            src = rq_src[rows, slot]
+            comm_end = jnp.maximum(link_free, now0) + ttime
+            q1 = jnp.where(
+                dev_ids[None, :] == src[:, None], now0[:, None],
+                jnp.maximum(now0, comm_end)[:, None],
+            )
+            dlb = jnp.broadcast_to(dl[:, None], (B, n_dev))
+            ok, sel, start, dur, use4 = _place_lp(st, q1, dlb, src, p)
+            ok = ok & valid_r
+            offl = ok & (sel != src)
+            st = _consume(st, sel, start, start + dur, ok)
+            link_free = jnp.where(offl, comm_end, link_free)
+            # the re-placed victim is now the newest commit on its device
+            vc_s, vc_end, vc_dl, vc_src, vc_ok = _vc_commit(
+                (vc_s, vc_end, vc_dl, vc_src, vc_ok), ok, sel, start,
+                start + dur, dl, src
+            )
+            stats = stats._replace(
+                lp_completed=stats.lp_completed + ok,
+                lp_requeued=stats.lp_requeued + ok,
+                lp_offloaded=stats.lp_offloaded + offl,
+                lp_four_core=stats.lp_four_core + (ok & use4),
+                comm_busy=stats.comm_busy + jnp.where(offl, ttime, 0.0),
+            )
+            rq_ok = rq_ok.at[rows, slot].set(valid_r & ~ok)
 
         for d in range(n_dev):
             t_rel = base + d * (FRAME_PERIOD / n_dev) * p.stagger
@@ -132,34 +271,103 @@ def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
 
             # -- HP: immediate slot on the source device -------------------
             # The detector always runs at frame release (§IV.B.1): if the
-            # strict-containment query finds no reserved gap, HP evicts LP
-            # capacity (the paper's single-victim preemption — 2 HP cores
-            # never need more than one LP victim).  Either way [now,
-            # now+dur) is consumed from every availability list, which is
-            # exactly what preemption does to *future* capacity; committed
-            # LP placements keep their completion credit, mirroring the
-            # serial engine's usually-successful reallocation path.
+            # strict-containment query finds no reserved gap, HP requests a
+            # preemption.  A live cached victim ⇒ committed preemption (the
+            # victim loses its credit and is re-queued, [now, now+dur) is
+            # evicted from every availability list); no victim ⇒ the serial
+            # engine's "no-preemptable" admission failure — the frame dies.
             hp_dur = st.min_dur[:, HP_IDX]
             hp_found, hp_start = _hp_query(st, d, now, hp_dur, p.hp_deadline)
+            if R > 0:
+                # the serial engine evicts only a task whose reserved slot
+                # overlaps the requested HP window (§IV.B.3)
+                victim_live = (vc_ok[:, d] & (vc_end[:, d] > now)
+                               & (vc_s[:, d] < now + hp_dur))
+            else:
+                # reallocation disabled: legacy capacity-eviction semantics
+                # (HP always runs, victims implicitly keep their credit)
+                victim_live = jnp.ones((B,), bool)
+            hp_ok = has_frame & (hp_found | victim_live)
+            preempt = has_frame & ~hp_found & victim_live
+            hp_fail = has_frame & ~hp_found & ~victim_live
             hp_start = jnp.where(hp_found, hp_start, now)
-            hp_ok = has_frame
             st = _consume(
                 st, jnp.full((B,), d), hp_start, hp_start + hp_dur, hp_ok
             )
+
+            if R > 0:
+                vc_ok = vc_ok.at[:, d].set(vc_ok[:, d] & ~preempt)
+                # the victim's placement-time completion credit is revoked;
+                # re-earned on re-placement or it becomes a miss
+                stats = stats._replace(lp_completed=stats.lp_completed
+                                       - preempt)
+
+                # immediate reallocation attempt (§VI.A: the serial engine
+                # re-enters the victim at HP-commit time, and that path
+                # succeeds in the common case — deferring a whole frame
+                # period would eat most of the victim's deadline budget)
+                dl_v = vc_dl[:, d]
+                src_v = vc_src[:, d]
+                comm_end = jnp.maximum(link_free, now) + ttime
+                q1 = jnp.where(
+                    dev_ids[None, :] == src_v[:, None], now[:, None],
+                    jnp.maximum(now, comm_end)[:, None],
+                )
+                ok_v, sel_v, start_v, dur_v, use4_v = _place_lp(
+                    st, q1, jnp.broadcast_to(dl_v[:, None], (B, n_dev)),
+                    src_v, p,
+                )
+                ok_v = ok_v & preempt
+                offl_v = ok_v & (sel_v != src_v)
+                st = _consume(st, sel_v, start_v, start_v + dur_v, ok_v)
+                link_free = jnp.where(offl_v, comm_end, link_free)
+                vc_s, vc_end, vc_dl, vc_src, vc_ok = _vc_commit(
+                    (vc_s, vc_end, vc_dl, vc_src, vc_ok), ok_v, sel_v,
+                    start_v, start_v + dur_v, dl_v, src_v,
+                )
+                stats = stats._replace(
+                    lp_completed=stats.lp_completed + ok_v,
+                    lp_requeued=stats.lp_requeued + ok_v,
+                    lp_offloaded=stats.lp_offloaded + offl_v,
+                    lp_four_core=stats.lp_four_core + (ok_v & use4_v),
+                    comm_busy=stats.comm_busy
+                    + jnp.where(offl_v, ttime, 0.0),
+                )
+
+                # unplaced victims enter the bounded re-queue buffer for
+                # next-tick retries; a full buffer drops the victim
+                # (counted missed, not silent)
+                free = jnp.argmin(rq_ok, axis=1)
+                has_free = ~rq_ok.all(axis=1)
+                unplaced = preempt & ~ok_v
+                push = unplaced & has_free
+                rq_dl = rq_dl.at[rows, free].set(
+                    jnp.where(push, dl_v, rq_dl[rows, free])
+                )
+                rq_src = rq_src.at[rows, free].set(
+                    jnp.where(push, src_v, rq_src[rows, free])
+                )
+                rq_ok = rq_ok.at[rows, free].set(rq_ok[rows, free] | push)
+                stats = stats._replace(
+                    missed_by_preemption=stats.missed_by_preemption
+                    + (unplaced & ~has_free),
+                )
+
             stats = stats._replace(
                 frames=stats.frames + has_frame,
                 hp_completed=stats.hp_completed + hp_ok,
-                hp_preempted=stats.hp_preempted + (has_frame & ~hp_found),
+                hp_failed=stats.hp_failed + hp_fail,
+                # committed preemptions only: an admission failure that
+                # found nothing to evict is hp_failed, not a preemption
+                hp_preempted=stats.hp_preempted + preempt,
             )
 
             # -- LP: up to 4 DNN tasks once HP completes -------------------
             n_lp = jnp.where(hp_ok, jnp.clip(vd, 0, MAX_LP), 0)
             release = hp_start + hp_dur
             deadline = now + p.lp_deadline_factor * FRAME_PERIOD
-            ttime = (p.transfer_bytes * 8.0) / (
-                p.nominal_bw_bps * jnp.maximum(bws, 1e-3)
-            )
             frame_ok = hp_ok
+            src_d = jnp.full((B,), d, jnp.int32)
             for k in range(MAX_LP):
                 mask = hp_ok & (k < n_lp)
                 comm_end = jnp.maximum(link_free, release) + ttime
@@ -169,32 +377,15 @@ def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
                     jnp.maximum(release, comm_end)[:, None],
                 )
                 dl = jnp.broadcast_to(deadline[:, None], (B, n_dev))
-                ok_c, start_c, dur_c = [], [], []
-                for ci in (LP2_IDX, LP4_IDX):
-                    dur = st.min_dur[:, ci]
-                    found, starts = _query(
-                        st, ci, q1, dl, jnp.broadcast_to(dur[:, None],
-                                                         (B, n_dev)), p
-                    )
-                    # prefer the source device, then earliest start
-                    key = jnp.where(found.astype(bool), starts, BIG)
-                    key = key - jnp.where(dev_ids[None, :] == d, 1e-3, 0.0)
-                    sel = jnp.argmin(key, axis=1)
-                    ok_c.append(jnp.take_along_axis(
-                        found.astype(bool), sel[:, None], axis=1)[:, 0])
-                    start_c.append(jnp.take_along_axis(
-                        starts, sel[:, None], axis=1)[:, 0])
-                    dur_c.append((dur, sel))
-                # §IV.B.2: 2-core preferred; widen to 4 cores only when the
-                # deadline would otherwise be violated
-                use4 = ~ok_c[0] & ok_c[1]
-                ok = (ok_c[0] | ok_c[1]) & mask
-                sel = jnp.where(use4, dur_c[1][1], dur_c[0][1])
-                start = jnp.where(use4, start_c[1], start_c[0])
-                dur = jnp.where(use4, dur_c[1][0], dur_c[0][0])
+                ok, sel, start, dur, use4 = _place_lp(st, q1, dl, src_d, p)
+                ok = ok & mask
                 offl = ok & (sel != d)
                 st = _consume(st, sel, start, start + dur, ok)
                 link_free = jnp.where(offl, comm_end, link_free)
+                vc_s, vc_end, vc_dl, vc_src, vc_ok = _vc_commit(
+                    (vc_s, vc_end, vc_dl, vc_src, vc_ok), ok, sel, start,
+                    start + dur, deadline, src_d,
+                )
                 stats = stats._replace(
                     lp_spawned=stats.lp_spawned + mask,
                     lp_completed=stats.lp_completed + ok,
@@ -210,15 +401,26 @@ def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
                 frames_completed=stats.frames_completed
                 + (has_frame & frame_ok)
             )
-        return (st, link_free, stats), None
+        return (st, link_free, (rq_dl, rq_src, rq_ok),
+                (vc_s, vc_end, vc_dl, vc_src, vc_ok), stats), None
 
     xs = (jnp.arange(values.shape[0], dtype=jnp.int32),
           values.astype(jnp.int32), bw_scale.astype(jnp.float32))
-    (sched, link_free, stats), _ = jax.lax.scan(
-        frame_step, (fleet.sched, fleet.link_free, init_stats(B)), xs
+    carry0 = (
+        fleet.sched, fleet.link_free,
+        (fleet.rq_deadline, fleet.rq_src, fleet.rq_valid),
+        (fleet.vc_start, fleet.vc_end, fleet.vc_deadline, fleet.vc_src,
+         fleet.vc_valid),
+        init_stats(B),
+    )
+    (sched, link_free, rq, vc, stats), _ = jax.lax.scan(
+        frame_step, carry0, xs
     )
     out = FleetState(
         sched=sched, link_free=link_free,
         now=jnp.full((B,), values.shape[0] * FRAME_PERIOD, jnp.float32),
+        rq_deadline=rq[0], rq_src=rq[1], rq_valid=rq[2],
+        vc_start=vc[0], vc_end=vc[1], vc_deadline=vc[2], vc_src=vc[3],
+        vc_valid=vc[4],
     )
     return out, stats

@@ -3,6 +3,26 @@
 `FleetStats` is a pytree of `[B]` arrays carried through the engine's
 scan; `summarize` reduces a (sub-)batch to Fig.-4-style rates with 95%
 confidence intervals over replicas.
+
+Preemption counters follow the serial engine's accounting so the two are
+directly comparable (calib/):
+
+- ``hp_preempted`` counts **committed** preemptions only — an HP
+  containment miss that found no evictable LP victim is an admission
+  failure (``hp_failed``), not a preemption.  One committed preemption
+  evicts exactly one victim (the paper's single-victim §IV.B.3 path), so
+  ``hp_preempted`` is also the victim count (the serial engine's
+  ``lp_preempted``).
+- ``lp_requeued`` counts victims successfully re-placed by the per-tick
+  reallocation pass (the serial engine's ``lp_realloc_success``).
+- ``missed_by_preemption`` counts victims dropped because their deadline
+  expired before re-placement or the bounded re-queue buffer was full.
+
+Conservation: every spawned LP task ends in exactly one of completed /
+failed / missed_by_preemption / still-pending-in-buffer, i.e.
+
+    lp_spawned == lp_completed + lp_failed + missed_by_preemption
+                  + rq_valid.sum(axis=1)
 """
 
 from __future__ import annotations
@@ -19,10 +39,14 @@ class FleetStats(NamedTuple):
     frames: jnp.ndarray             # i32[B] frames released
     frames_completed: jnp.ndarray   # i32[B] HP + every LP task placed in time
     hp_completed: jnp.ndarray       # i32[B]
-    hp_preempted: jnp.ndarray       # i32[B] HP had to evict LP capacity
+    hp_preempted: jnp.ndarray       # i32[B] committed preemptions (= victims)
+    hp_failed: jnp.ndarray          # i32[B] admission failed: nothing to evict
     lp_spawned: jnp.ndarray         # i32[B]
-    lp_completed: jnp.ndarray       # i32[B] placed with end <= deadline
+    lp_completed: jnp.ndarray       # i32[B] placed with end <= deadline,
+    #                                        net of revoked victim credit
     lp_failed: jnp.ndarray          # i32[B] deadline-infeasible everywhere
+    lp_requeued: jnp.ndarray        # i32[B] victims re-placed after eviction
+    missed_by_preemption: jnp.ndarray  # i32[B] victims expired / buffer-full
     lp_offloaded: jnp.ndarray       # i32[B]
     lp_four_core: jnp.ndarray       # i32[B] widened to the 4-core config
     start_delay_sum: jnp.ndarray    # f32[B] Σ (start - release) of placed LP
@@ -32,7 +56,7 @@ class FleetStats(NamedTuple):
 def init_stats(batch: int) -> FleetStats:
     zi = jnp.zeros((batch,), jnp.int32)
     zf = jnp.zeros((batch,), jnp.float32)
-    return FleetStats(zi, zi, zi, zi, zi, zi, zi, zi, zi, zf, zf)
+    return FleetStats(zi, zi, zi, zi, zi, zi, zi, zi, zi, zi, zi, zi, zf, zf)
 
 
 def _mean_ci(x: np.ndarray) -> dict:
@@ -43,23 +67,46 @@ def _mean_ci(x: np.ndarray) -> dict:
     return {"mean": round(mean, 4), "ci95": round(ci, 4)}
 
 
+def per_replica_rates(stats: FleetStats) -> dict:
+    """Per-replica `[B]` rate arrays — the single place the counter
+    algebra lives (summarize and the calibration harness both consume
+    it, so the two can never drift apart)."""
+    s = {k: np.asarray(v, np.float64) for k, v in stats._asdict().items()}
+    frames = np.maximum(s["frames"], 1)
+    lp = np.maximum(s["lp_spawned"], 1)
+    # placements ever committed = net completions + revoked victim credits
+    # (offload/4-core counters accrue at placement time and are not
+    # unwound by preemption, so they normalise by this total)
+    placed = np.maximum(s["lp_completed"] + s["hp_preempted"], 1)
+    victims = np.maximum(s["hp_preempted"], 1)
+    # only *initial* placements carry a start-delay sample (the requeue
+    # paths measure nothing), so the mean excludes realloc placements
+    initial = np.maximum(
+        s["lp_completed"] + s["hp_preempted"] - s["lp_requeued"], 1
+    )
+    return {
+        "frame_completion_rate": s["frames_completed"] / frames,
+        "hp_completion_rate": s["hp_completed"] / frames,
+        "hp_preemption_rate": s["hp_preempted"] / frames,
+        "hp_failure_rate": s["hp_failed"] / frames,
+        "lp_completion_rate": s["lp_completed"] / lp,
+        "lp_violation_rate": s["lp_failed"] / lp,
+        "requeue_success_rate": s["lp_requeued"] / victims,
+        "missed_by_preemption_rate": s["missed_by_preemption"] / lp,
+        "lp_offload_fraction": s["lp_offloaded"] / placed,
+        "four_core_fraction": s["lp_four_core"] / placed,
+        "mean_start_delay_s": s["start_delay_sum"] / initial,
+    }
+
+
 def summarize(stats: FleetStats, n_frames: int) -> dict:
     """Reduce per-replica counters to mean ± 95% CI across the batch."""
     s = {k: np.asarray(v) for k, v in stats._asdict().items()}
-    frames = np.maximum(s["frames"], 1)
-    lp = np.maximum(s["lp_spawned"], 1)
-    placed = np.maximum(s["lp_completed"], 1)
     sim_time = n_frames * FRAME_PERIOD
-    out = {
-        "replicas": int(s["frames"].size),
-        "frame_completion_rate": _mean_ci(s["frames_completed"] / frames),
-        "hp_preemption_rate": _mean_ci(s["hp_preempted"] / frames),
-        "lp_completion_rate": _mean_ci(s["lp_completed"] / lp),
-        "lp_violation_rate": _mean_ci(s["lp_failed"] / lp),
-        "lp_offload_fraction": _mean_ci(s["lp_offloaded"] / placed),
-        "four_core_fraction": _mean_ci(s["lp_four_core"] / placed),
-        "mean_start_delay_s": _mean_ci(s["start_delay_sum"] / placed),
-        "link_utilisation": _mean_ci(s["comm_busy"] / sim_time),
-        "lp_throughput_per_s": _mean_ci(s["lp_completed"] / sim_time),
-    }
+    out = {"replicas": int(s["frames"].size)}
+    out.update(
+        (k, _mean_ci(v)) for k, v in per_replica_rates(stats).items()
+    )
+    out["link_utilisation"] = _mean_ci(s["comm_busy"] / sim_time)
+    out["lp_throughput_per_s"] = _mean_ci(s["lp_completed"] / sim_time)
     return out

@@ -5,7 +5,7 @@ axis — every window/link array gains a `[B, ...]` dimension, so the whole
 Monte-Carlo fleet is a valid `jax.lax.scan` carry and a single XLA
 program advances all replicas per tick.
 
-Two fleet-only fields ride along:
+Fleet-only fields ride along:
 
     link_free  f32[B]   serial-link FIFO head — the earliest instant a new
                         offload transfer may start on each replica's WLAN.
@@ -17,6 +17,24 @@ Two fleet-only fields ride along:
     now        f32[B]   per-replica simulation clock (replicas share the
                         frame grid but keep their own clock so partially
                         filled batches stay independent).
+
+Preemption fidelity (§IV.B.3) needs two more groups of arrays:
+
+    rq_deadline  f32[B, R]   bounded victim re-queue: LP tasks evicted by an
+    rq_src       i32[B, R]   HP preemption wait here for re-placement on a
+    rq_valid     bool[B, R]  later tick (R = FleetParams.requeue_slots).
+
+    vc_start     f32[B, Dev] one-deep victim cache: the most recently
+    vc_end       f32[B, Dev] committed LP placement per device.  The serial
+    vc_deadline  f32[B, Dev] engine evicts the overlapping LP task with the
+    vc_src       i32[B, Dev] *farthest* deadline; deadlines grow with
+    vc_valid     bool[B, Dev] release time, so the newest commit is that
+                             victim whenever it overlaps the HP slot — a
+                             one-slot cache per device is the
+                             bounded-memory abstraction of the workload
+                             scan (older overlapping tasks are invisible,
+                             so preemption can fail admission where the
+                             serial engine would still find a victim).
 """
 
 from __future__ import annotations
@@ -36,6 +54,16 @@ class FleetState(NamedTuple):
     sched: SchedState        # every leaf carries a leading [B] axis
     link_free: jnp.ndarray   # [B]
     now: jnp.ndarray         # [B]
+    # victim re-queue buffer (preempted LP tasks awaiting re-placement)
+    rq_deadline: jnp.ndarray  # f32[B, R]
+    rq_src: jnp.ndarray       # i32[B, R]
+    rq_valid: jnp.ndarray     # bool[B, R]
+    # per-device cache of the most recent committed LP placement
+    vc_start: jnp.ndarray     # f32[B, Dev]
+    vc_end: jnp.ndarray       # f32[B, Dev]
+    vc_deadline: jnp.ndarray  # f32[B, Dev]
+    vc_src: jnp.ndarray       # i32[B, Dev]
+    vc_valid: jnp.ndarray     # bool[B, Dev]
 
 
 def broadcast_state(st: SchedState, batch: int) -> SchedState:
@@ -51,7 +79,7 @@ def stack_states(states: list[SchedState]) -> SchedState:
 
 
 def make_fleet(batch: int, n_devices: int = 4, bandwidth_bps: float = 20e6,
-               *, max_windows: int = 16) -> FleetState:
+               *, max_windows: int = 16, requeue_slots: int = 4) -> FleetState:
     """A pristine B-replica fleet: every device fully available from t=0.
 
     Built by exporting a fresh `RASScheduler` (so window/track/link layout
@@ -61,6 +89,10 @@ def make_fleet(batch: int, n_devices: int = 4, bandwidth_bps: float = 20e6,
     scan: the per-tick housekeeping pass recycles elapsed windows, so
     occupancy never approaches the cap — W=8 yields byte-identical sweep
     statistics, and doubling W roughly halves replicas/sec on CPU.
+
+    ``requeue_slots`` must match ``FleetParams.requeue_slots`` of the
+    engine that will consume this fleet (the re-queue buffer is part of
+    the scan carry, so its width is a compile-time shape).
     """
     base = export_state(
         RASScheduler(n_devices, bandwidth_bps), max_windows=max_windows
@@ -69,6 +101,14 @@ def make_fleet(batch: int, n_devices: int = 4, bandwidth_bps: float = 20e6,
         sched=broadcast_state(base, batch),
         link_free=jnp.zeros((batch,), jnp.float32),
         now=jnp.zeros((batch,), jnp.float32),
+        rq_deadline=jnp.zeros((batch, requeue_slots), jnp.float32),
+        rq_src=jnp.zeros((batch, requeue_slots), jnp.int32),
+        rq_valid=jnp.zeros((batch, requeue_slots), bool),
+        vc_start=jnp.zeros((batch, n_devices), jnp.float32),
+        vc_end=jnp.zeros((batch, n_devices), jnp.float32),
+        vc_deadline=jnp.zeros((batch, n_devices), jnp.float32),
+        vc_src=jnp.zeros((batch, n_devices), jnp.int32),
+        vc_valid=jnp.zeros((batch, n_devices), bool),
     )
 
 

@@ -73,7 +73,7 @@ def run_sweep(cfg: SweepConfig) -> dict:
         bw_scale = np.concatenate([bw_scale, bw_scale[:, :pad]], axis=1)
     per_replica: list[FleetStats] = []
     for b0 in range(0, values.shape[1], bs):
-        fleet = make_fleet(bs, cfg.n_devices)
+        fleet = make_fleet(bs, cfg.n_devices, requeue_slots=p.requeue_slots)
         _, stats = fleet_run(
             fleet,
             values[:, b0:b0 + bs],

@@ -79,6 +79,36 @@ class Metrics:
         self.frames_total = len(frames)
         self.frames_completed = sum(1 for f in frames if f.completed)
 
+    def calib_view(self) -> dict:
+        """Counters normalised for the fleet-vs-serial calibration harness
+        (calib/): every key has a direct fleet analog (see
+        ``repro.calib.harness.fleet_view``), with preemption accounting
+        aligned on *committed* preemptions — ``lp_preempted`` here counts
+        actually-evicted victims, exactly what the fleet engine's
+        ``hp_preempted`` counts.
+
+        ``lp_placed_rate`` folds deadline-violated tasks back in: the
+        fleet abstraction has no run-time jitter, so its completions
+        correspond to the serial engine's *placements in time* rather
+        than its jitter-surviving completions.
+        """
+        frames = max(self.frames_total, 1)
+        lp = max(self.lp_spawned, 1)
+        return {
+            "frames": self.frames_total,
+            "frame_completion_rate": self.frame_completion_rate,
+            "hp_completion_rate": self.hp_completed / frames,
+            "hp_failure_rate": self.hp_failed / frames,
+            "preemption_rate": self.lp_preempted / frames,
+            "lp_completion_rate": self.lp_completed / lp,
+            "lp_placed_rate": (self.lp_completed + self.lp_violated) / lp,
+            "four_core_fraction": self.four_core_fraction,
+            "lp_spawned": self.lp_spawned,
+            "lp_completed": self.lp_completed,
+            "preemptions": self.lp_preempted,
+            "realloc_success": self.lp_realloc_success,
+        }
+
     def summary(self) -> dict:
         return {
             "frame_completion_rate": round(self.frame_completion_rate, 4),
