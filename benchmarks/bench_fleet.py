@@ -3,18 +3,36 @@ serial discrete-event simulator looped one replica at a time.
 
 The acceptance bar for the batched engine is >= 10x the serial DES at
 batch 256 (same frame count, same uniform workload family).  Emits
-BENCH_fleet.json with the full curve.
+BENCH_fleet.json with the full curve, reporting **compile time** (first
+call, includes tracing + XLA) and **steady-state tick time** as separate
+columns so compile-latency regressions are visible independently of
+throughput.
+
+As a CLI this doubles as the CI perf gate: ``--gate`` compares the
+speedup-vs-serial at batch 256 against the committed BENCH_fleet.json
+and exits non-zero on a >20% regression.  Speedup (not raw replicas/sec)
+is gated because both engines run on the same machine, making the ratio
+portable across CI hardware.
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet --quick --gate
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
 
 import jax
 
-from benchmarks.common import csv_row, emit
+from benchmarks.common import RESULTS_DIR, csv_row, emit
 from repro.fleet import FleetParams, fleet_run, make_fleet, make_workload
 from repro.sim.engine import ExperimentConfig, run_experiment
+
+#: relative speedup loss at batch 256 that fails the ``--gate`` check.
+GATE_REGRESSION = 0.20
 
 
 def _time_fleet(batch: int, n_frames: int, params: FleetParams) -> dict:
@@ -24,7 +42,7 @@ def _time_fleet(batch: int, n_frames: int, params: FleetParams) -> dict:
     jax.block_until_ready(
         fleet_run(fleet, wl.values, wl.bw_scale, params=params)
     )
-    compile_s = time.perf_counter() - t0
+    first_s = time.perf_counter() - t0
     t0 = time.perf_counter()
     jax.block_until_ready(
         fleet_run(fleet, wl.values, wl.bw_scale, params=params)
@@ -32,8 +50,11 @@ def _time_fleet(batch: int, n_frames: int, params: FleetParams) -> dict:
     run_s = time.perf_counter() - t0
     return {
         "batch": batch,
-        "compile_s": round(compile_s, 3),
+        # first call = trace + XLA compile + one run; steady run subtracted
+        # out so the column isolates compile latency
+        "compile_s": round(max(first_s - run_s, 0.0), 3),
         "run_s": round(run_s, 4),
+        "tick_us": round(run_s / n_frames * 1e6, 1),
         "replicas_per_s": round(batch / run_s, 2),
     }
 
@@ -65,12 +86,14 @@ def run(*, quick: bool = False, n_frames: int = 40) -> dict:
         curve.append(r)
         csv_row(
             f"fleet_batched_b{b}", r["run_s"] / b * 1e6,
-            f"{r['speedup_vs_serial']}x_serial",
+            f"{r['speedup_vs_serial']}x_serial_compile_{r['compile_s']}s",
         )
 
     out = {
         "n_frames": n_frames,
         "backend": jax.default_backend(),
+        "segment_frames": params.segment_frames,
+        "compact_every": params.compact_every,
         "serial_des_s_per_replica": round(serial_s, 4),
         "serial_des_replicas_per_s": round(serial_rps, 2),
         "fleet": curve,
@@ -85,7 +108,47 @@ def run(*, quick: bool = False, n_frames: int = 40) -> dict:
     return out
 
 
-if __name__ == "__main__":
-    import json
+def check_regression(out: dict, committed: dict | None) -> tuple[bool, str]:
+    """Compare speedup-at-256 against the committed curve: a drop of more
+    than ``GATE_REGRESSION`` fails (the committed file is refreshed by
+    running the full bench and committing results/bench/BENCH_fleet.json).
+    """
+    if committed is None:
+        return False, "no committed baseline (results/bench/BENCH_fleet.json)"
+    base = committed.get("speedup_at_256")
+    new = out.get("speedup_at_256")
+    if not base or not new:
+        return False, "speedup_at_256 missing from baseline or run"
+    floor = round(base * (1.0 - GATE_REGRESSION), 2)
+    return new >= floor, f"speedup_at_256 {new} vs committed {base} " \
+                         f"(floor {floor})"
 
-    print(json.dumps(run(), indent=1))
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="batch 256 only (CI mode)")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail on >20%% speedup regression vs the "
+                         "committed BENCH_fleet.json")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (default committed BENCH_fleet)")
+    args = ap.parse_args(argv)
+    # load the committed baseline BEFORE the run overwrites it via emit()
+    base_path = args.baseline or os.path.join(RESULTS_DIR,
+                                              "BENCH_fleet.json")
+    try:
+        committed = json.load(open(base_path))
+    except FileNotFoundError:
+        committed = None
+    out = run(quick=args.quick)
+    print(json.dumps(out, indent=1))
+    if not args.gate:
+        return 0
+    ok, msg = check_regression(out, committed)
+    print(f"# fleet perf gate {'OK' if ok else 'FAILED'}: {msg}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

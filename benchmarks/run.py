@@ -6,6 +6,7 @@ fleet-vs-serial calibration report).
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
     PYTHONPATH=src python -m benchmarks.run --list   # enumerate benches
+    PYTHONPATH=src python -m benchmarks.run --only fleet --only calib
 """
 
 from __future__ import annotations
@@ -104,36 +105,55 @@ def main() -> None:
                     help="fewer seeds/frames (CI mode)")
     ap.add_argument("--list", action="store_true",
                     help="enumerate registered benchmarks and exit")
+    ap.add_argument("--only", action="append", metavar="NAME",
+                    help="run only the named benchmark(s); repeatable. "
+                         "Paper-claim aggregation covers what actually ran.")
     args = ap.parse_args()
     if args.list:
         list_benches()
         return
+    selected = REGISTRY
+    if args.only:
+        known = {b.name for b in REGISTRY}
+        unknown = sorted(set(args.only) - known)
+        if unknown:
+            ap.error(f"unknown benchmark(s): {', '.join(unknown)} "
+                     f"(see --list)")
+        selected = tuple(b for b in REGISTRY if b.name in set(args.only))
     args.n_frames = 40 if args.quick else 95
     args.seeds = (7,) if args.quick else (7, 11, 23)
 
     print("name,us_per_call,derived")
     t0 = time.time()
     results = {}
-    for spec in REGISTRY:
+    for spec in selected:
         results[spec.name] = spec.run(args)
 
     all_checks = {}
     for bench, fig in PAPER_CHECK_BENCHES.items():
+        if bench not in results:
+            continue
         for k, v in results[bench]["paper_checks"].items():
             all_checks[f"{fig}.{k}"] = bool(v)
-    all_checks["fleet.speedup_10x_at_b256"] = bool(
-        results["fleet"]["meets_10x_bar"]
-    )
-    all_checks["calib.within_tolerance"] = bool(results["calib"]["gate_ok"])
+    if "fleet" in results:
+        all_checks["fleet.speedup_10x_at_b256"] = bool(
+            results["fleet"]["meets_10x_bar"]
+        )
+    if "calib" in results:
+        all_checks["calib.within_tolerance"] = bool(
+            results["calib"]["gate_ok"]
+        )
     n_ok = sum(all_checks.values())
     print(f"# paper-claim checks: {n_ok}/{len(all_checks)} passed "
           f"({time.time() - t0:.1f}s total)")
     failed = [k for k, v in all_checks.items() if not v]
     if failed:
         print("# FAILED:", ", ".join(failed))
-    os.makedirs("results/bench", exist_ok=True)
-    json.dump(all_checks, open("results/bench/paper_checks.json", "w"),
-              indent=1)
+    # subset runs (--only) must not clobber the full paper_checks table
+    if not args.only:
+        os.makedirs("results/bench", exist_ok=True)
+        json.dump(all_checks, open("results/bench/paper_checks.json", "w"),
+                  indent=1)
 
 
 if __name__ == "__main__":

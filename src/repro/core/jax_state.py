@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.tasks import ALL_CONFIGS
+from repro.core.tasks import ALL_CONFIGS, DEVICE_CORES
 
 BIG = 1e30
 
@@ -78,6 +78,217 @@ def export_state(sched, max_windows: int = 16) -> SchedState:
 
 
 # ---------------------------------------------------------------------------
+# config geometry (static tables used by the fan-out commit)
+# ---------------------------------------------------------------------------
+
+#: cores per track of each config list == the config's own core count.
+CFG_CORES = np.array([c.cores for c in ALL_CONFIGS], np.int32)
+
+#: tracks per config list.
+CFG_TRACKS = (DEVICE_CORES // CFG_CORES).astype(np.int32)
+
+#: OCC_TABLE[task_cfg, list_cfg] — how many tracks of ``list_cfg`` a
+#: committed ``task_cfg`` task occupies: ceil(task_cores / track_cores),
+#: capped at the list's track count (the §IV.A.1 fan-out width; matches
+#: AvailabilityList.subtract's ``occupy_tracks``).
+OCC_TABLE = np.minimum(
+    -(-CFG_CORES[:, None] // CFG_CORES[None, :]), CFG_TRACKS[None, :]
+).astype(np.int32)
+
+
+def _csum(x):
+    """Inclusive cumsum over the last axis via a triangular mask — only
+    broadcast/compare/reduce ops, so the same code lowers inside a Pallas
+    kernel body (jnp.cumsum does not)."""
+    n = x.shape[-1]
+    tril = jnp.arange(n)[:, None] <= jnp.arange(n)[None, :]   # k <= w
+    return jnp.sum(jnp.where(tril, x[..., :, None], 0), axis=-2)
+
+
+def _trim_tracks(t1, t2, valid, s, e, md, active):
+    """Multi-remainder trim of ``[s, e)`` from every window of the active
+    tracks (``[..., W]`` arrays; ``s``/``e``/``md``/``active`` broadcast).
+
+    Every overlapping window keeps its left piece ``[t1, s)`` and right
+    piece ``[e, t2)`` when they satisfy the minimum duration — the exact
+    semantics of ``AvailabilityList.subtract``.  Pieces stay *in place*:
+    a window keeps its slot for its surviving piece (left preferred), so
+    only the straddle window — one whose left AND right pieces both
+    survive — needs a second slot.  Tracks hold pairwise-disjoint
+    windows, so at most one straddle exists per track; its right piece
+    spills into the first free slot.  O(W) broadcast/compare/reduce ops
+    throughout (this is the per-commit hot path of the fleet scan, and
+    it must also lower inside the Pallas placement kernel).
+
+    Pieces that satisfy the minimum duration but find no free slot (or
+    extra straddles of non-disjoint test inputs) are *counted*, never
+    silently lost: returns ``(t1', t2', valid', n_dropped, time_dropped)``
+    with the drop tallies reduced over the window axis.
+    """
+    W = t1.shape[-1]
+    lanes = jnp.arange(W)
+    ov = valid & (t1 < e) & (s < t2) & active
+    left_t2 = jnp.minimum(t2, s)
+    right_t1 = jnp.maximum(t1, e)
+    left_ok = ov & (left_t2 - t1 >= md)
+    right_ok = ov & (t2 - right_t1 >= md)
+    both = left_ok & right_ok
+    # in-place: the slot keeps the left piece when it survives, else the
+    # right piece, else goes free
+    new_valid = jnp.where(ov, left_ok | right_ok, valid)
+    new_t1 = jnp.where(ov & ~left_ok & right_ok, right_t1, t1)
+    new_t2 = jnp.where(ov & left_ok, left_t2, t2)
+    new_t1 = jnp.where(new_valid, new_t1, BIG)
+    new_t2 = jnp.where(new_valid, new_t2, BIG)
+    # spill the (single) straddle's right piece into the first free slot
+    # — first-index min-reduces, no argmin/gather
+    first_free = jnp.min(
+        jnp.where(~new_valid, lanes, W), axis=-1, keepdims=True
+    )
+    first_both = jnp.min(jnp.where(both, lanes, W), axis=-1, keepdims=True)
+    placed = (first_both < W) & (first_free < W)
+    oh_b = both & (lanes == first_both)
+    sp_t1 = jnp.sum(jnp.where(oh_b, right_t1, 0.0), axis=-1, keepdims=True)
+    sp_t2 = jnp.sum(jnp.where(oh_b, t2, 0.0), axis=-1, keepdims=True)
+    place = placed & (lanes == first_free)
+    new_t1 = jnp.where(place, sp_t1, new_t1)
+    new_t2 = jnp.where(place, sp_t2, new_t2)
+    new_valid = new_valid | place
+    # every straddle right piece except a successfully-placed first one
+    # is dropped (counted, not lost)
+    dropped = both & ~(placed & (lanes == first_both))
+    n_drop = dropped.sum(axis=-1).astype(jnp.int32)
+    t_drop = jnp.where(dropped, t2 - right_t1, 0.0).sum(axis=-1)
+    return new_t1, new_t2, new_valid, n_drop, t_drop
+
+
+def fanout_commit(t1, t2, valid, min_dur, dev, cfg, s, e, do, *,
+                  kernel_safe: bool = False):
+    """Batched §IV.A.1 fan-out commit: consume ``[s, e)`` on device
+    ``dev`` across every config list, trimming the ``OCC_TABLE[cfg, ci]``
+    most-overlapping tracks of each list ``ci`` (multi-remainder).
+
+    Shapes: windows ``[N, Dev, CFG, T, W]``; ``min_dur [N, CFG]``;
+    ``dev``/``cfg`` i32 ``[N]``; ``s``/``e`` f32 ``[N]``; ``do`` bool
+    ``[N]`` masks the commit per row.  Returns
+    ``(t1', t2', valid', n_dropped [N], time_dropped [N])``.
+
+    ``kernel_safe`` picks the device gather/scatter lowering; the trim
+    math in between is identical either way, so both forms produce
+    bit-identical values:
+
+    - ``False`` (default, the fleet-scan hot path): ``take_along_axis``
+      gather + ``.at[] .set`` scatter — XLA updates the committed device
+      row in place inside a scan instead of rewriting the whole
+      ``[N, Dev, CFG, T, W]`` state per commit.  ~25 commits/tick make
+      full-array rewrites the dominant engine cost.
+    - ``True``: broadcast/compare/reduce only (one-hot where + sum), the
+      subset that lowers inside the Pallas placement kernel body.
+    """
+    N, n_dev, n_cfg, T, W = t1.shape
+    dev_oh = jnp.arange(n_dev)[None, :] == dev[:, None]        # [N, Dev]
+    if kernel_safe:
+        gather = lambda a, fill: jnp.sum(
+            jnp.where(dev_oh[:, :, None, None, None], a, fill), axis=1
+        )
+        t1d = gather(t1, 0.0)                                  # [N, CFG, T, W]
+        t2d = gather(t2, 0.0)
+        vd = jnp.any(valid & dev_oh[:, :, None, None, None], axis=1)
+    else:
+        idx = dev[:, None, None, None, None]
+        take = lambda a: jnp.take_along_axis(a, idx, axis=1)[:, 0]
+        t1d = take(t1)                                         # [N, CFG, T, W]
+        t2d = take(t2)
+        vd = take(valid)
+    sb = s[:, None, None, None]
+    eb = e[:, None, None, None]
+    ov = vd & (t1d < eb) & (sb < t2d)
+    ol = jnp.where(ov, jnp.minimum(t2d, eb) - jnp.maximum(t1d, sb), 0.0)
+    ol = ol.sum(axis=-1)                                       # [N, CFG, T]
+    # stable descending rank of tracks by overlap (first index wins ties)
+    track_ids = jnp.arange(T)
+    beats = (ol[..., None, :] > ol[..., :, None]) | (
+        (ol[..., None, :] == ol[..., :, None])
+        & (track_ids[None, :] < track_ids[:, None])
+    )
+    rank = beats.sum(axis=-1)                                  # [N, CFG, T]
+    # occupancy width: ceil(task_cores / track_cores), selected from
+    # OCC_TABLE by the (data-dependent) committed config.  Unrolled over
+    # the tiny static table with scalar constants only, so no array
+    # constant is captured when this traces inside the Pallas kernel.
+    list_ids = jnp.arange(n_cfg)[None, :]
+    occ = jnp.zeros((N, n_cfg), jnp.int32)
+    for ti in range(n_cfg):
+        for li in range(n_cfg):
+            occ = jnp.where(
+                (cfg[:, None] == ti) & (list_ids == li),
+                jnp.int32(OCC_TABLE[ti, li]), occ,
+            )                                                  # [N, CFG]
+    active = (
+        do[:, None, None] & (rank < occ[:, :, None]) & (ol > 0.0)
+    )                                                          # [N, CFG, T]
+    md = min_dur[:, :, None, None]
+    nt1, nt2, nv, n_drop, t_drop = _trim_tracks(
+        t1d, t2d, vd, sb, eb, md, active[..., None]
+    )
+    # write back only committed rows (do=False rows stay bit-identical)
+    if kernel_safe:
+        sel = (dev_oh & do[:, None])[:, :, None, None, None]
+        out_t1 = jnp.where(sel, nt1[:, None], t1)
+        out_t2 = jnp.where(sel, nt2[:, None], t2)
+        out_valid = jnp.where(sel, nv[:, None], valid)
+    else:
+        rows = jnp.arange(N)
+        dom = do[:, None, None, None]
+        out_t1 = t1.at[rows, dev].set(jnp.where(dom, nt1, t1d))
+        out_t2 = t2.at[rows, dev].set(jnp.where(dom, nt2, t2d))
+        out_valid = valid.at[rows, dev].set(jnp.where(dom, nv, vd))
+    n_drop = jnp.where(do, n_drop.sum(axis=(1, 2)), 0)
+    t_drop = jnp.where(do, t_drop.sum(axis=(1, 2)), 0.0)
+    return out_t1, out_t2, out_valid, n_drop, t_drop
+
+
+def compact_tracks(t1, t2, valid, *, eps: float = 1e-6):
+    """Per-track window compaction: sort windows by start and merge
+    adjacent/abutting ones (``next.t1 <= prev.t2 + eps``) so remainders
+    produced by repeated bisects cannot clog the fixed-W slots.  Disjoint
+    windows conserve total availability exactly.  ``[..., W]`` arrays ->
+    ``(t1', t2', valid')``."""
+    W = t1.shape[-1]
+    order = jnp.argsort(jnp.where(valid, t1, BIG), axis=-1)
+    t1s = jnp.take_along_axis(t1, order, axis=-1)
+    t2s = jnp.take_along_axis(t2, order, axis=-1)
+    vs = jnp.take_along_axis(valid, order, axis=-1)
+    cmax = jax.lax.cummax(jnp.where(vs, t2s, -BIG), axis=t1.ndim - 1)
+    prev_end = jnp.concatenate(
+        [jnp.full_like(cmax[..., :1], -BIG), cmax[..., :-1]], axis=-1
+    )
+    starts_seg = vs & (t1s > prev_end + eps)
+    seg = _csum(starts_seg.astype(jnp.int32)) - 1
+    lanes = jnp.arange(W)
+    member = vs[..., None] & (seg[..., None] == lanes)         # [..., W, W]
+    head = starts_seg[..., None] & (seg[..., None] == lanes)
+    new_valid = jnp.any(member, axis=-2)
+    new_t1 = jnp.where(
+        new_valid, jnp.sum(jnp.where(head, t1s[..., None], 0.0), axis=-2), BIG
+    )
+    new_t2 = jnp.where(
+        new_valid, jnp.max(jnp.where(member, t2s[..., None], -BIG), axis=-2),
+        BIG,
+    )
+    return new_t1, new_t2, new_valid
+
+
+def compact_state(state: SchedState) -> SchedState:
+    """Apply window compaction to every (device, config, track) of a
+    (possibly batched) SchedState."""
+    t1, t2, valid = compact_tracks(
+        state.win_t1, state.win_t2, state.win_valid
+    )
+    return state._replace(win_t1=t1, win_t2=t2, win_valid=valid)
+
+
+# ---------------------------------------------------------------------------
 # queries (pure functions of SchedState)
 # ---------------------------------------------------------------------------
 
@@ -95,61 +306,32 @@ def _device_slot(state: SchedState, dev, cfg_idx, q1, deadline, dur):
     return best < BIG, flat // W, flat % W, best
 
 
-def _bisect(state: SchedState, dev, cfg_idx, track, slot, s, e) -> SchedState:
-    """Consume [s, e) from window (dev, cfg, track, slot) across EVERY
-    config list of the device (the §IV.A.1 fan-out write), keeping
-    min-duration remainders.  Remainders reuse the consumed slot (left) and
-    the first invalid slot (right) of the same track."""
-    def fan_out(ci, st: SchedState):
-        # trim any window of config ci / any track overlapping [s, e)
-        t1 = st.win_t1[dev, ci]
-        t2 = st.win_t2[dev, ci]
-        valid = st.win_valid[dev, ci]
-        overlap = valid & (t1 < e) & (s < t2)
-        # consume at most ceil(cores/track_cores)=1 most-overlapping track
-        ol = jnp.where(
-            overlap, jnp.minimum(t2, e) - jnp.maximum(t1, s), 0.0
-        ).sum(axis=1)                                   # per track
-        tr = jnp.argmax(ol)
-        row_t1, row_t2 = t1[tr], t2[tr]
-        row_valid = valid[tr]
-        row_overlap = overlap[tr]
-        md = st.min_dur[ci]
-        left_ok = row_overlap & (s - row_t1 >= md)
-        right_ok = row_overlap & (row_t2 - e >= md)
-        # left remainder replaces the window in place; right goes to a free slot
-        new_t1 = jnp.where(row_overlap, jnp.where(left_ok, row_t1, BIG), row_t1)
-        new_t2 = jnp.where(row_overlap, jnp.where(left_ok, s, BIG), row_t2)
-        new_valid = jnp.where(row_overlap, left_ok, row_valid)
-        # place ONE right remainder (windows in a track overlap [s,e) at most
-        # twice in practice; the reference implementation handles the rest —
-        # dropping extras only makes the scheduler conservative, never wrong)
-        any_right = right_ok.any()
-        r_idx = jnp.argmax(right_ok)
-        free = jnp.argmin(new_valid)  # first invalid slot
-        new_t1 = jnp.where(
-            any_right, new_t1.at[free].set(jnp.where(new_valid[free], new_t1[free], e)), new_t1
-        )
-        new_t2 = jnp.where(
-            any_right,
-            new_t2.at[free].set(
-                jnp.where(new_valid[free], new_t2[free], row_t2[r_idx])
-            ),
-            new_t2,
-        )
-        new_valid = jnp.where(
-            any_right, new_valid.at[free].set(True), new_valid
-        )
-        return SchedState(
-            st.win_t1.at[dev, ci, tr].set(new_t1),
-            st.win_t2.at[dev, ci, tr].set(new_t2),
-            st.win_valid.at[dev, ci, tr].set(new_valid),
-            st.min_dur, st.link_t1, st.link_t2, st.link_cap, st.link_used,
-        )
+def _bisect(state: SchedState, dev, cfg_idx, track, slot, s, e,
+            do=True) -> tuple[SchedState, jnp.ndarray]:
+    """Consume [s, e) from device ``dev`` across EVERY config list (the
+    §IV.A.1 fan-out write) for a committed task of config ``cfg_idx``,
+    keeping ALL min-duration remainders (multi-remainder form — the exact
+    semantics of ``AvailabilityList.subtract``, including the
+    ``OCC_TABLE`` track fan-out for wide tasks).  ``track``/``slot`` are
+    retained for API compatibility; the fan-out recomputes the
+    most-overlapping tracks per config.  ``do`` masks the commit.
 
-    for ci in range(len(ALL_CONFIGS)):
-        state = fan_out(ci, state)
-    return state
+    Returns ``(new_state, n_dropped)`` where ``n_dropped`` counts
+    min-duration-satisfying remainders that found no free window slot
+    (fragmentation telemetry — previously a silent drop)."""
+    del track, slot
+    t1, t2, valid, n_drop, _ = fanout_commit(
+        state.win_t1[None], state.win_t2[None], state.win_valid[None],
+        state.min_dur[None],
+        jnp.asarray(dev, jnp.int32)[None],
+        jnp.asarray(cfg_idx, jnp.int32)[None],
+        jnp.asarray(s, jnp.float32)[None],
+        jnp.asarray(e, jnp.float32)[None],
+        jnp.asarray(do, bool)[None],
+    )
+    return state._replace(
+        win_t1=t1[0], win_t2=t2[0], win_valid=valid[0]
+    ), n_drop[0]
 
 
 @functools.partial(jax.jit, static_argnames=("cfg_idx",))
@@ -160,11 +342,8 @@ def hp_place(state: SchedState, dev, now, *, cfg_idx: int = 0):
     found, track, slot, start = _device_slot(
         state, dev, cfg_idx, now, now + dur + 1e-6, dur
     )
-    new_state = jax.lax.cond(
-        found,
-        lambda st: _bisect(st, dev, cfg_idx, track, slot, start, start + dur),
-        lambda st: st,
-        state,
+    new_state, _ = _bisect(
+        state, dev, cfg_idx, track, slot, start, start + dur, do=found
     )
     return found, start, new_state
 
@@ -204,13 +383,8 @@ def lp_place(state: SchedState, src_dev, now, deadline, *,
         d = jnp.argmin(key)
         ok = feasible[d]
         start = starts_adj[d]
-        st = jax.lax.cond(
-            ok,
-            lambda s: _bisect(s, d, cfg_idx, tracks[d], slots[d], start,
-                              start + dur),
-            lambda s: s,
-            st,
-        )
+        st, _ = _bisect(st, d, cfg_idx, tracks[d], slots[d], start,
+                        start + dur, do=ok)
         return (st, n_ok + ok.astype(jnp.int32)), (ok, d, start)
 
     (state, n_ok), (oks, devs, starts) = jax.lax.scan(

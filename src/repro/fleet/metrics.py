@@ -51,12 +51,17 @@ class FleetStats(NamedTuple):
     lp_four_core: jnp.ndarray       # i32[B] widened to the 4-core config
     start_delay_sum: jnp.ndarray    # f32[B] Σ (start - release) of placed LP
     comm_busy: jnp.ndarray          # f32[B] link seconds spent transferring
+    remainders_dropped: jnp.ndarray  # i32[B] min-duration remainders lost to
+    #                                  full window arrays (fragmentation
+    #                                  telemetry; previously a silent drop)
 
 
 def init_stats(batch: int) -> FleetStats:
     zi = jnp.zeros((batch,), jnp.int32)
     zf = jnp.zeros((batch,), jnp.float32)
-    return FleetStats(zi, zi, zi, zi, zi, zi, zi, zi, zi, zi, zi, zi, zf, zf)
+    return FleetStats(
+        zi, zi, zi, zi, zi, zi, zi, zi, zi, zi, zi, zi, zf, zf, zi
+    )
 
 
 def _mean_ci(x: np.ndarray) -> dict:
@@ -96,6 +101,7 @@ def per_replica_rates(stats: FleetStats) -> dict:
         "lp_offload_fraction": s["lp_offloaded"] / placed,
         "four_core_fraction": s["lp_four_core"] / placed,
         "mean_start_delay_s": s["start_delay_sum"] / initial,
+        "remainder_drop_rate": s["remainders_dropped"] / frames,
     }
 
 

@@ -1,0 +1,39 @@
+"""Dispatching wrapper for the fused fleet placement (mirrors
+window_query/ops.py — the single source of the backend policy; the fleet
+engine routes every placement attempt through here)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.placement.placement import fused_place
+from repro.kernels.placement.ref import fused_place_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_place_op(t1, t2, valid, min_dur, q1, dl, src, do, *,
+                   backend: str = "auto", cfg_pref: int = 1,
+                   cfg_fallback: int = 2):
+    """One fused placement attempt for the whole fleet batch.
+
+    backend: "auto" → Pallas kernel on TPU, jnp oracle elsewhere;
+    "kernel" → force the kernel (interpret mode off-TPU); "ref" → force
+    the jnp oracle.  Returns the oracle's output tuple either way.
+    """
+    if backend == "auto":
+        backend = "kernel" if on_tpu() else "ref"
+    if backend == "kernel":
+        return fused_place(
+            t1, t2, valid, min_dur, q1, dl, src, do,
+            cfg_pref=cfg_pref, cfg_fallback=cfg_fallback,
+            interpret=not on_tpu(),
+        )
+    if backend != "ref":
+        raise ValueError(f"unknown placement backend: {backend!r}")
+    return fused_place_ref(
+        t1, t2, valid, min_dur, q1, dl, src, do,
+        cfg_pref=cfg_pref, cfg_fallback=cfg_fallback,
+    )

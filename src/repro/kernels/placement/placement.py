@@ -1,0 +1,138 @@
+"""Fused placement kernel (pl.pallas_call + BlockSpec).
+
+The fleet engine's per-tick hot path used to be a *chain* of device
+programs per placement attempt: two ``window_query`` launches (2-core +
+4-core configs), an argmin device-select, and a vmapped ``_bisect``
+scatter cascade for the fan-out commit.  This kernel fuses the whole
+attempt — §IV.B.2 multi-containment query, slot/device selection,
+most-overlapping-track (victim window) selection and the §IV.A.1
+multi-remainder fan-out commit — into ONE launch for the whole
+``[B, Dev, CFG, T, W]`` fleet batch:
+
+    grid = (replica blocks,)
+    block: windows [block_b, Dev, CFG, T, W], params [block_b, ...]
+
+The window arrays are aliased input→output (``input_output_aliases``), so
+the commit is an in-place VMEM update; replicas whose ``do`` mask is off
+are passed through bit-identical.
+
+The kernel body traces ``ref._fused_place_math`` with
+``kernel_safe=True`` (broadcast/compare/reduce ops only, no gather /
+scatter / sort) — the same formula as the oracle, which differs only in
+the device gather/scatter lowering inside ``fanout_commit``
+(``take_along_axis`` + in-place scatter, bit-identical values); the
+equivalence tests assert exact equality.
+
+VMEM per tile: 6 · block_b · Dev·CFG·T·W · 4 B plus parameter rows —
+≈ 0.3 MB at (block_b=8, Dev=4, CFG=3, T=2, W=16).  Like the window-query
+kernel this is interpret-validated on CPU; real-TPU numbers are a
+ROADMAP item.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.placement.ref import _fused_place_math
+
+
+def _placement_kernel(q1_ref, dl_ref, src_ref, do_ref, md_ref, t1_ref,
+                      t2_ref, valid_ref, t1_out, t2_out, valid_out, ok_out,
+                      sel_out, start_out, dur_out, use4_out, drop_out, *,
+                      cfg_pref: int, cfg_fallback: int):
+    t1 = t1_ref[...]                         # [bb, Dev, CFG, T, W]
+    t2 = t2_ref[...]
+    valid = valid_ref[...] != 0
+    q1 = q1_ref[...]                         # [bb, Dev]
+    dl = dl_ref[...]
+    src = src_ref[...]                       # [bb]
+    do = do_ref[...] != 0
+    md = md_ref[...]                         # [bb, CFG]
+    nt1, nt2, nv, ok, sel, start, dur, use4, n_drop = _fused_place_math(
+        t1, t2, valid, md, q1, dl, src, do,
+        cfg_pref=cfg_pref, cfg_fallback=cfg_fallback, kernel_safe=True,
+    )
+    t1_out[...] = nt1
+    t2_out[...] = nt2
+    valid_out[...] = nv.astype(jnp.int32)
+    ok_out[...] = ok.astype(jnp.int32)
+    sel_out[...] = sel.astype(jnp.int32)
+    start_out[...] = start
+    dur_out[...] = dur
+    use4_out[...] = use4.astype(jnp.int32)
+    drop_out[...] = n_drop.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg_pref", "cfg_fallback", "block_b", "interpret"),
+)
+def fused_place(t1, t2, valid, min_dur, q1, dl, src, do, *,
+                cfg_pref: int = 1, cfg_fallback: int = 2, block_b: int = 8,
+                interpret: bool = False):
+    """Fused placement attempt for a whole fleet batch in one launch.
+
+    t1, t2: [B, Dev, CFG, T, W] f32; valid: same shape (bool/int);
+    min_dur: [B, CFG] f32; q1, dl: [B, Dev] f32; src: [B] i32;
+    do: [B] bool/int.  Returns
+    ``(t1', t2', valid' bool, ok bool, sel i32, start f32, dur f32,
+    use4 bool, n_dropped i32)`` — the same tuple as the jnp oracle.
+    """
+    B, Dev, CFG, T, W = t1.shape
+    valid = valid.astype(jnp.int32)
+    q1 = jnp.broadcast_to(jnp.asarray(q1, jnp.float32), (B, Dev))
+    dl = jnp.broadcast_to(jnp.asarray(dl, jnp.float32), (B, Dev))
+    src = jnp.asarray(src, jnp.int32)
+    do = jnp.asarray(do).astype(jnp.int32)
+    block_b = min(block_b, B)
+    pad = (-B) % block_b
+    if pad:
+        padw = ((0, pad),) + ((0, 0),) * 4
+        t1 = jnp.pad(t1, padw)
+        t2 = jnp.pad(t2, padw)
+        valid = jnp.pad(valid, padw)
+        min_dur = jnp.pad(min_dur, ((0, pad), (0, 0)))
+        q1 = jnp.pad(q1, ((0, pad), (0, 0)))
+        dl = jnp.pad(dl, ((0, pad), (0, 0)))
+        src = jnp.pad(src, (0, pad))
+        do = jnp.pad(do, (0, pad))          # padded replicas never commit
+    Bp = t1.shape[0]
+
+    win_spec = pl.BlockSpec(
+        (block_b, Dev, CFG, T, W), lambda i: (i, 0, 0, 0, 0)
+    )
+    devp_spec = pl.BlockSpec((block_b, Dev), lambda i: (i, 0))
+    cfgp_spec = pl.BlockSpec((block_b, CFG), lambda i: (i, 0))
+    rep_spec = pl.BlockSpec((block_b,), lambda i: (i,))
+    kernel = functools.partial(
+        _placement_kernel, cfg_pref=cfg_pref, cfg_fallback=cfg_fallback
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(Bp // block_b,),
+        in_specs=[devp_spec, devp_spec, rep_spec, rep_spec, cfgp_spec,
+                  win_spec, win_spec, win_spec],
+        out_specs=[win_spec, win_spec, win_spec, rep_spec, rep_spec,
+                   rep_spec, rep_spec, rep_spec, rep_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, Dev, CFG, T, W), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, Dev, CFG, T, W), jnp.float32),
+            jax.ShapeDtypeStruct((Bp, Dev, CFG, T, W), jnp.int32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp,), jnp.float32),
+            jax.ShapeDtypeStruct((Bp,), jnp.float32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+        ],
+        # the commit is an in-place update of the window arrays
+        input_output_aliases={5: 0, 6: 1, 7: 2},
+        interpret=interpret,
+    )(q1, dl, src, do, min_dur, t1, t2, valid)
+    nt1, nt2, nv, ok, sel, start, dur, use4, n_drop = out
+    return (nt1[:B], nt2[:B], nv[:B].astype(bool), ok[:B].astype(bool),
+            sel[:B], start[:B], dur[:B], use4[:B].astype(bool), n_drop[:B])

@@ -1,0 +1,104 @@
+"""Pure-jnp oracle for the fused placement kernel.
+
+One *placement attempt* of the batched fleet engine — the §IV.B.2
+multi-containment query over every device for the preferred (2-core) and
+fallback (4-core) LP configs, device selection (source preference, then
+earliest start), and the §IV.A.1 multi-remainder fan-out commit on the
+winning device — as a single pure function of the window arrays.
+
+``_fused_place_math`` shares one trace between the oracle and the Pallas
+kernel body (placement.py): with ``kernel_safe=True`` every op is
+broadcast/compare/reduce (no gather/scatter/sort), the subset that
+lowers in a kernel.  The oracle defaults to ``kernel_safe=False``, which
+swaps only the device gather/scatter lowering inside ``fanout_commit``
+for ``take_along_axis`` + in-place scatter — bit-identical values, but
+XLA can update the committed row in place inside the fleet scan (the
+equivalence tests assert exact equality across both forms).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jax_state import BIG, fanout_commit
+
+#: source-device preference margin (seconds) — matches the fleet engine's
+#: historical tie-break.
+SRC_PREF = 1e-3
+
+
+def _fused_place_math(t1, t2, valid, min_dur, q1, dl, src, do, *,
+                      cfg_pref: int, cfg_fallback: int,
+                      kernel_safe: bool = False):
+    """Query + select + commit on ``[N, Dev, CFG, T, W]`` window arrays.
+
+    ``min_dur [N, CFG]``; ``q1``/``dl`` ``[N, Dev]`` (comm-adjusted per
+    device); ``src`` i32 ``[N]``; ``do`` bool ``[N]`` masks the attempt.
+
+    Returns ``(t1', t2', valid', ok, sel, start, dur, use4, n_dropped)``
+    with per-replica outputs ``[N]``; ``ok`` is already ANDed with ``do``
+    and the windows of replicas with ``ok=False`` are bit-identical to the
+    input.
+    """
+    N, n_dev = q1.shape
+    dev_ids = jnp.arange(n_dev)
+    per_cfg = []
+    for ci in (cfg_pref, cfg_fallback):
+        dur_c = min_dur[:, ci]                                 # [N]
+        tt1 = t1[:, :, ci].reshape(N, n_dev, -1)
+        tt2 = t2[:, :, ci].reshape(N, n_dev, -1)
+        vv = valid[:, :, ci].reshape(N, n_dev, -1)
+        startw = jnp.maximum(tt1, q1[:, :, None])
+        feas = vv & (
+            startw + dur_c[:, None, None] <= jnp.minimum(tt2, dl[:, :, None])
+        )
+        best = jnp.min(jnp.where(feas, startw, BIG), axis=-1)  # [N, Dev]
+        found = best < BIG
+        # prefer the source device, then earliest start; first index wins
+        # ties (== jnp.argmin), expressed as a min-reduce so the identical
+        # code lowers inside the kernel
+        key = jnp.where(found, best, BIG)
+        key = key - jnp.where(dev_ids[None, :] == src[:, None], SRC_PREF, 0.0)
+        kmin = jnp.min(key, axis=1)
+        sel_c = jnp.min(
+            jnp.where(key == kmin[:, None], dev_ids[None, :], n_dev), axis=1
+        )
+        sel_oh = dev_ids[None, :] == sel_c[:, None]
+        ok_c = jnp.any(found & sel_oh, axis=1)
+        start_c = jnp.sum(jnp.where(sel_oh, best, 0.0), axis=1)
+        per_cfg.append((ok_c, sel_c, start_c, dur_c))
+    (ok2, sel2, start2, dur2), (ok4, sel4, start4, dur4) = per_cfg
+    # §IV.B.2: 2-core preferred; widen to 4 cores only when the deadline
+    # would otherwise be violated
+    use4 = ~ok2 & ok4
+    ok = (ok2 | ok4) & do
+    sel = jnp.where(use4, sel4, sel2)
+    start = jnp.where(use4, start4, start2)
+    dur = jnp.where(use4, dur4, dur2)
+    cfg_commit = jnp.where(
+        use4, jnp.int32(cfg_fallback), jnp.int32(cfg_pref)
+    )
+    nt1, nt2, nv, n_drop, _ = fanout_commit(
+        t1, t2, valid, min_dur, sel, cfg_commit, start, start + dur, ok,
+        kernel_safe=kernel_safe,
+    )
+    return nt1, nt2, nv, ok, sel, start, dur, use4, n_drop
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg_pref", "cfg_fallback", "kernel_safe")
+)
+def fused_place_ref(t1, t2, valid, min_dur, q1, dl, src, do, *,
+                    cfg_pref: int = 1, cfg_fallback: int = 2,
+                    kernel_safe: bool = False):
+    """jnp oracle entry point (see ``_fused_place_math`` for shapes)."""
+    return _fused_place_math(
+        t1, t2, valid.astype(bool), min_dur,
+        jnp.asarray(q1, jnp.float32), jnp.asarray(dl, jnp.float32),
+        jnp.asarray(src, jnp.int32), jnp.asarray(do, bool),
+        cfg_pref=cfg_pref, cfg_fallback=cfg_fallback,
+        kernel_safe=kernel_safe,
+    )

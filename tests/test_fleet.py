@@ -7,9 +7,12 @@ All `fleet_run` invocations share one shape/params signature so the
 whole module pays for a single XLA compilation.
 """
 
+import dataclasses
+
 import numpy as np
 import pytest
 
+import jax
 import jax.numpy as jnp
 
 from _hyp import given, settings, st
@@ -311,6 +314,81 @@ def test_empty_workload_places_nothing():
                          params=PARAMS)
     assert int(np.asarray(stats.frames).sum()) == 0
     assert int(np.asarray(stats.lp_spawned).sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# scan segmenting, carry donation, in-scan compaction
+# ---------------------------------------------------------------------------
+
+def _assert_runs_equal(res_a, res_b):
+    out_a, stats_a = res_a
+    out_b, stats_b = res_b
+    for a, b in zip(stats_a, stats_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(out_a, out_b):
+        for xa, xb in zip(jax.tree_util.tree_leaves(a),
+                          jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def test_segmented_run_matches_unsegmented():
+    """F=8 split into 3-tick segments (last segment padded with one empty
+    tick) must be bit-identical to a single-segment run — padded ticks are
+    exact no-ops."""
+    wl = make_workload("uniform", B, F, DEV, seed=4, congestion=0.3)
+    whole = fleet_run(make_fleet(B, DEV), wl.values, wl.bw_scale,
+                      params=dataclasses.replace(PARAMS, segment_frames=0))
+    split = fleet_run(make_fleet(B, DEV), wl.values, wl.bw_scale,
+                      params=dataclasses.replace(PARAMS, segment_frames=3))
+    _assert_runs_equal(whole, split)
+
+
+def test_donated_carry_leaves_input_fleet_valid():
+    """_run_segment donates its carry buffers; fleet_run must copy first
+    so the caller can reuse the same fleet (benchmarks run it twice)."""
+    wl = make_workload("uniform", B, F, DEV, seed=2, congestion=0.2)
+    fleet = make_fleet(B, DEV)
+    first = fleet_run(fleet, wl.values, wl.bw_scale, params=PARAMS)
+    again = fleet_run(fleet, wl.values, wl.bw_scale, params=PARAMS)
+    _assert_runs_equal(first, again)
+
+
+def test_per_tick_compaction_preserves_invariants():
+    """compact_every=1 (a compaction pass before every tick) must keep
+    the conservation identities intact and never decrease completions —
+    compaction only merges abutting windows, it cannot lose capacity."""
+    wl = make_workload("poisson_burst", B, F, DEV, seed=6, congestion=0.4,
+                       lam=3.0)
+    base = fleet_run(make_fleet(B, DEV), wl.values, wl.bw_scale,
+                     params=PARAMS)
+    out, stats = fleet_run(
+        make_fleet(B, DEV), wl.values, wl.bw_scale,
+        params=dataclasses.replace(PARAMS, compact_every=1),
+    )
+    s = _stats_np(stats)
+    pending = np.asarray(out.rq_valid).sum(axis=1)
+    np.testing.assert_array_equal(
+        s["lp_spawned"],
+        s["lp_completed"] + s["lp_failed"] + s["missed_by_preemption"]
+        + pending,
+    )
+    np.testing.assert_array_equal(s["hp_completed"] + s["hp_failed"],
+                                  s["frames"])
+    # compaction frees W slots: fragmentation drops can only shrink
+    assert (s["remainders_dropped"]
+            <= _stats_np(base[1])["remainders_dropped"]).all()
+
+
+def test_remainders_dropped_counter_in_stats():
+    """The fragmentation counter is carried per replica and is
+    non-negative under a congested workload."""
+    wl = make_workload("poisson_burst", B, F, DEV, seed=8, congestion=0.5,
+                       lam=3.0)
+    _, stats = fleet_run(make_fleet(B, DEV), wl.values, wl.bw_scale,
+                         params=PARAMS)
+    rd = np.asarray(stats.remainders_dropped)
+    assert rd.shape == (B,)
+    assert (rd >= 0).all()
 
 
 # ---------------------------------------------------------------------------
