@@ -1,0 +1,38 @@
+"""Static-analysis gate as a bench registry entry.
+
+Runs the Pallas geometry checker + jaxlint over ``src/repro`` (see
+repro.analysis), prints one CSV row with the wall time and the
+kernel/violation tally, and returns the full report.  ``benchmarks.run``
+exits non-zero when the report is not clean — this is the CI ``analysis``
+job.
+
+Seeded-violation fixtures (the negative acceptance tests) are selected
+with ``REPRO_ANALYSIS_FIXTURE=race|oob|alias|tracer-leak`` (comma list):
+
+    REPRO_ANALYSIS_FIXTURE=race python -m benchmarks.run --only analysis
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import csv_row, emit
+from repro.analysis.cli import env_fixtures, print_report, run_analysis
+
+
+def run() -> dict:
+    fixtures = env_fixtures()
+    t0 = time.perf_counter()
+    report = run_analysis(fixtures)
+    us = (time.perf_counter() - t0) * 1e6
+    geo = report["geometry"]
+    derived = (
+        f"kernels={geo['n_kernels']}"
+        f"_violations={geo['n_violations']}"
+        f"_lint={report['lint']['n_findings']}"
+        + (f"_fixtures={'+'.join(fixtures)}" if fixtures else "")
+    )
+    csv_row("analysis", us, derived)
+    print_report(report)
+    emit("analysis", report)
+    return report

@@ -91,11 +91,11 @@ def run() -> dict:
     # fully-jitted placement step (core/jax_state.py): the whole LP
     # decision (link reserve + multi-containment + bisect commits) as one
     # XLA program.
-    from repro.core.jax_state import CFG_INDEX, export_state, lp_place
+    from repro.core.jax_state import CFG_INDEX, export_state, lp_place_jit
     import jax.numpy as jnp
 
     st = export_state(_loaded_ras())
-    f = lp_place.lower(st, jnp.asarray(0), jnp.asarray(30.0),
+    f = lp_place_jit.lower(st, jnp.asarray(0), jnp.asarray(30.0),
                        jnp.asarray(90.0), cfg_idx=CFG_INDEX["lp2"],
                        n_tasks=4).compile()
     h = lambda: jax.block_until_ready(

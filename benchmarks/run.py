@@ -68,6 +68,11 @@ def _roofline(a):
     return roofline.run() or {}
 
 
+def _analysis(a):
+    from benchmarks import bench_analysis
+    return bench_analysis.run()
+
+
 #: Execution order matters: paper figures first, then kernels/fleet/calib.
 REGISTRY: tuple[BenchSpec, ...] = (
     BenchSpec("completion", "Fig. 4 frame-completion vs trace family "
@@ -86,6 +91,8 @@ REGISTRY: tuple[BenchSpec, ...] = (
               _calib),
     BenchSpec("roofline", "HLO FLOP/byte roofline of the model zoo",
               _roofline),
+    BenchSpec("analysis", "Pallas geometry checker + jaxlint gate "
+              "(REPRO_ANALYSIS_FIXTURE seeds violations)", _analysis),
 )
 
 #: Benches whose result dict carries a ``paper_checks`` table.
@@ -143,6 +150,8 @@ def main() -> None:
         all_checks["calib.within_tolerance"] = bool(
             results["calib"]["gate_ok"]
         )
+    if "analysis" in results:
+        all_checks["analysis.clean"] = bool(results["analysis"]["ok"])
     n_ok = sum(all_checks.values())
     print(f"# paper-claim checks: {n_ok}/{len(all_checks)} passed "
           f"({time.time() - t0:.1f}s total)")
@@ -154,6 +163,10 @@ def main() -> None:
         os.makedirs("results/bench", exist_ok=True)
         json.dump(all_checks, open("results/bench/paper_checks.json", "w"),
                   indent=1)
+    # the static-analysis gate is hard: violations fail the invocation
+    # (the other benches stay report-only; calib has its own CI gate)
+    if not all_checks.get("analysis.clean", True):
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,128 @@
+"""Analysis driver: geometry checker + jaxlint, one report, one exit
+code.
+
+    PYTHONPATH=src python -m repro.analysis               # gate the repo
+    PYTHONPATH=src python -m repro.analysis --fixture race    # must fail
+    REPRO_ANALYSIS_FIXTURE=oob python -m benchmarks.run --only analysis
+
+Writes ``results/analysis/analysis_report.json`` (uploaded as a CI
+artifact) and exits non-zero on any geometry violation or unsuppressed
+lint finding.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+from repro.analysis import jaxlint, pallas_check
+from repro.analysis.fixtures import ALL_FIXTURES, GEOMETRY_FIXTURES
+
+ENV_FIXTURE = "REPRO_ANALYSIS_FIXTURE"
+
+_SRC_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def env_fixtures() -> tuple[str, ...]:
+    raw = os.environ.get(ENV_FIXTURE, "")
+    return tuple(f for f in (s.strip() for s in raw.split(",")) if f)
+
+
+def _module_to_relpath(module: str) -> str:
+    """'repro.kernels.x.y' -> 'kernels/x/y.py' (relative to src/repro)."""
+    parts = module.split(".")
+    if parts and parts[0] == "repro":
+        parts = parts[1:]
+    return "/".join(parts) + ".py"
+
+
+def run_analysis(fixtures: tuple[str, ...] = (), *,
+                 report_dir: str = "results/analysis",
+                 root: str | None = None) -> dict:
+    """Run both static layers; return the JSON-able report (key ``ok``)."""
+    unknown = sorted(set(fixtures) - set(ALL_FIXTURES))
+    if unknown:
+        raise ValueError(
+            f"unknown fixture(s) {unknown}; known: {list(ALL_FIXTURES)}"
+        )
+    root = root or os.path.join(_SRC_ROOT, "repro")
+
+    # -- geometry ---------------------------------------------------------
+    providers = dict(pallas_check.load_registry())
+    geo_fixtures = [f for f in fixtures if f in GEOMETRY_FIXTURES]
+    if geo_fixtures:
+        from repro.analysis.fixtures.racy_kernel import GEOMETRY_PROVIDERS
+        for f in geo_fixtures:
+            providers[f"fixture_{f}"] = GEOMETRY_PROVIDERS[f]
+    geometry = pallas_check.check_all(providers)
+
+    # -- lint -------------------------------------------------------------
+    registered = {
+        _module_to_relpath(m) for m in pallas_check.registered_modules()
+    }
+    files = list(jaxlint.iter_source_files(root))
+    if "tracer-leak" in fixtures:
+        files.append(os.path.join(
+            os.path.dirname(os.path.abspath(__file__)),
+            "fixtures", "leaky_jit.py",
+        ))
+    findings = jaxlint.lint_paths(
+        root, files, registered_paths=registered
+    )
+    lint = {
+        "ok": not findings,
+        "n_findings": len(findings),
+        "findings": [dataclasses.asdict(f) for f in findings],
+    }
+
+    report = {
+        "ok": bool(geometry["ok"] and lint["ok"]),
+        "fixtures": list(fixtures),
+        "geometry": geometry,
+        "lint": lint,
+    }
+    if report_dir:
+        os.makedirs(report_dir, exist_ok=True)
+        with open(os.path.join(report_dir, "analysis_report.json"), "w") as f:
+            json.dump(report, f, indent=1)
+    return report
+
+
+def print_report(report: dict) -> None:
+    geo = report["geometry"]
+    print(f"geometry: {geo['n_kernels']} kernels, "
+          f"{sum(k['grid_points_checked'] for k in geo['kernels'].values())} "
+          f"grid points, {geo['n_violations']} violation(s)")
+    for v in geo["violations"]:
+        print(f"  [{v['kind']}] {v['kernel']}/{v['case']}: {v['detail']}")
+    lint = report["lint"]
+    print(f"jaxlint: {lint['n_findings']} finding(s)")
+    for f in lint["findings"]:
+        print(f"  {f['path']}:{f['line']}: [{f['rule']}] {f['msg']}")
+    print("analysis:", "OK" if report["ok"] else "FAILED")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--fixture", action="append", default=[],
+                    choices=list(ALL_FIXTURES), metavar="NAME",
+                    help="include a seeded-violation fixture "
+                         f"({', '.join(ALL_FIXTURES)}); repeatable")
+    ap.add_argument("--report-dir", default="results/analysis",
+                    help="where to write analysis_report.json "
+                         "('' disables)")
+    args = ap.parse_args(argv)
+    fixtures = tuple(dict.fromkeys((*args.fixture, *env_fixtures())))
+    report = run_analysis(fixtures, report_dir=args.report_dir)
+    print_report(report)
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

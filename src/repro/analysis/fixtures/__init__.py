@@ -1,0 +1,15 @@
+"""Seeded-violation fixtures for the analysis gate.
+
+Excluded from the default scan; selected with ``--fixture <name>`` /
+``REPRO_ANALYSIS_FIXTURE=<name>[,<name>...]`` to prove each checker layer
+actually trips (the analysis CLI must exit non-zero on every one):
+
+- ``race``  — pallas grid writing one output block from two grid points
+- ``oob``   — block tiling past the array edge with no declared mask
+- ``alias`` — input ref sharing a buffer with an output, undeclared
+- ``tracer-leak`` — jitted function branching on a traced value
+"""
+
+GEOMETRY_FIXTURES = ("race", "oob", "alias")
+LINT_FIXTURES = ("tracer-leak",)
+ALL_FIXTURES = GEOMETRY_FIXTURES + LINT_FIXTURES

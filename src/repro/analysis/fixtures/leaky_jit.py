@@ -1,0 +1,13 @@
+"""Tracer-leak lint fixture: a jitted function branching on a traced
+value.  Never imported by production code — linted as a file via
+``--fixture tracer-leak`` to prove the ``tracer-leak`` rule trips (the
+analysis CLI must exit non-zero with this file in the scan set)."""
+
+import jax
+
+
+@jax.jit
+def clamp_positive(x):
+    if x > 0:          # tracer leak: Python branch on a traced value
+        return x
+    return 0.0 * x

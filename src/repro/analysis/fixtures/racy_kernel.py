@@ -1,0 +1,87 @@
+"""Deliberately-broken Pallas geometry fixtures.
+
+``racy_sum`` is a *real, runnable* kernel whose output BlockSpec maps
+every grid point to block 0: on TPU the two grid points race on the same
+VMEM tile; in interpret mode (sequential grid) the last writer silently
+wins, so half the input vanishes from the output — exactly the
+silent-corruption mode the geometry checker exists to rule out
+statically.  The accompanying geometry specs feed the checker's three
+violation classes (write race, OOB tile, undeclared aliasing).
+
+This module lives under ``analysis/fixtures/`` and is excluded from the
+default lint/geometry scan; the tests and the ``--fixture`` CLI flag pull
+it in explicitly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.analysis.pallas_check import BlockDecl, KernelGeometry
+
+_MODULE = "repro.analysis.fixtures.racy_kernel"
+
+
+def _racy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * (pl.program_id(0) + 1.0)
+
+
+def racy_sum(x, *, interpret: bool = True):
+    """x: [2n] f32 -> [n].  Both grid points write output block 0 — a
+    write race the oracle-style tests cannot see (interpret mode runs the
+    grid sequentially, so the result is deterministic but wrong: the
+    i=0 contribution is silently overwritten)."""
+    n = x.shape[0] // 2
+    return pl.pallas_call(
+        _racy_kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((n,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),    # the race
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def racy_sum_oracle(x):
+    """What a correct reduction over the two blocks would return."""
+    n = x.shape[0] // 2
+    return x[:n] * 1.0 + x[n:] * 2.0
+
+
+def race_geometry():
+    return [KernelGeometry(
+        kernel="fixture_race", module=_MODULE, case="n8",
+        grid=(2,),
+        inputs=(BlockDecl("x", (8,), (4,), lambda i: (i,)),),
+        outputs=(BlockDecl("o", (4,), (4,), lambda i: (0,)),),
+    )]
+
+
+def oob_geometry():
+    # blocks of 4 tile an array of extent 10: grid point 2 spans [8, 12)
+    # with no declared mask for the ragged edge
+    return [KernelGeometry(
+        kernel="fixture_oob", module=_MODULE, case="n10b4",
+        grid=(3,),
+        inputs=(BlockDecl("x", (10,), (4,), lambda i: (i,)),),
+        outputs=(BlockDecl("o", (10,), (4,), lambda i: (i,)),),
+    )]
+
+
+def alias_geometry():
+    # input and output share a buffer but declare no input_output_alias
+    return [KernelGeometry(
+        kernel="fixture_alias", module=_MODULE, case="inplace",
+        grid=(2,),
+        inputs=(BlockDecl("x", (8,), (4,), lambda i: (i,), buffer="state"),),
+        outputs=(BlockDecl("o", (8,), (4,), lambda i: (i,), buffer="state"),),
+    )]
+
+
+GEOMETRY_PROVIDERS = {
+    "race": race_geometry,
+    "oob": oob_geometry,
+    "alias": alias_geometry,
+}

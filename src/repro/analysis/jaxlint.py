@@ -1,0 +1,473 @@
+"""JAX hazard linter: an AST pass over ``src/repro/`` for the failure
+modes that bit-exact oracle tests cannot see.
+
+Rules
+-----
+
+``tracer-leak``
+    Python control flow (``if``/``while``) or ``bool()``/``int()``/
+    ``float()`` on a traced value inside a jit-decorated function.  The
+    pass infers *staticness* per name: ``static_argnames`` of the jit
+    decorator, shape/dtype/ndim accesses, literals and arithmetic over
+    those are static; non-static parameters and anything produced by a
+    ``jnp.``/``jax.``/``pl.`` call are traced.  Unknown names (imports,
+    globals) are assumed static so the rule stays near-zero false
+    positive — the geometry/equivalence tests guard the rest.
+
+``promotion-hazard``
+    ``jnp.arange/zeros/ones/full/empty/eye/linspace`` without an explicit
+    ``dtype`` in window/availability arithmetic (``core/``, ``fleet/``,
+    ``kernels/``, ``calib/``).  Under ``JAX_ENABLE_X64`` these silently
+    widen to int64/float64 — int64 iotas do not lower on TPU, so the same
+    trim math that traces inside the Pallas placement kernel would abort,
+    and f64 window arrays double the fleet state's footprint.
+
+``scan-donate``
+    A jit-decorated entry point whose body runs ``jax.lax.scan`` but
+    whose decorator has no ``donate_argnums``: the scan carry is rebuilt
+    in fresh buffers every call instead of updating in place (the exact
+    regression the segmented fleet driver exists to avoid).  Suppress
+    with an inline ``# repro: lint-ok(scan-donate)`` where callers must
+    keep the input pytree alive.
+
+``unregistered-pallas-call``
+    A module calls ``pl.pallas_call`` but is not covered by the geometry
+    checker's registry (``analysis/pallas_check.py``) — its grid/BlockSpec
+    layout is unproven.
+
+Suppressions: an inline ``# repro: lint-ok(<rule>[, <rule>...])`` comment
+on the flagged line (or the line above it) silences that finding;
+``analysis/lint_allow.txt`` holds ``<relpath>:<rule>`` lines for
+file-wide allows, so pre-existing intentional patterns never block CI.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Iterable, Sequence
+
+RULES = (
+    "tracer-leak",
+    "promotion-hazard",
+    "scan-donate",
+    "unregistered-pallas-call",
+)
+
+#: rule → path prefixes (relative to the scan root) it applies to;
+#: absent = everywhere.
+RULE_PATHS = {
+    "promotion-hazard": ("core/", "fleet/", "kernels/", "calib/"),
+}
+
+#: jnp factory calls that default to a config-dependent dtype, and the
+#: positional index at which ``dtype`` may appear.
+_FACTORY_DTYPE_POS = {
+    "arange": 3, "zeros": 1, "ones": 1, "empty": 1, "full": 2,
+    "eye": 3, "linspace": 5,
+}
+
+_SUPPRESS_RE = re.compile(r"#\s*repro:\s*lint-ok\(([^)]*)\)")
+
+#: calls whose result is static when every argument is static.
+_STATIC_CALLS = {"len", "min", "max", "int", "float", "abs", "range",
+                 "tuple", "sorted", "sum", "round", "isinstance"}
+
+#: attribute roots whose calls always produce traced values.
+_TRACED_ROOTS = {"jnp", "jax", "pl", "pltpu", "lax", "checkify"}
+
+#: attributes that are static regardless of their base (shape metadata).
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str       # relative to the scan root
+    line: int
+    rule: str
+    msg: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.msg}"
+
+
+# ---------------------------------------------------------------------------
+# jit decorator parsing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class JitInfo:
+    static_argnames: set[str]
+    has_donate: bool
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.jit' for Attribute chains, 'jit' for Names, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _const_strs(node: ast.AST) -> set[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out = set()
+        for elt in node.elts:
+            out |= _const_strs(elt)
+        return out
+    return set()
+
+
+def _jit_info(fn: ast.FunctionDef) -> JitInfo | None:
+    """Return JitInfo when ``fn`` carries a jit decorator, else None."""
+    for dec in fn.decorator_list:
+        name = _dotted(dec)
+        if name.endswith("jit"):
+            return JitInfo(static_argnames=set(), has_donate=False)
+        if isinstance(dec, ast.Call):
+            callee = _dotted(dec.func)
+            if callee.endswith("jit"):
+                info = JitInfo(set(), False)
+                for kw in dec.keywords:
+                    if kw.arg == "static_argnames":
+                        info.static_argnames |= _const_strs(kw.value)
+                    if kw.arg == "donate_argnums":
+                        info.has_donate = True
+                return info
+            if callee.endswith("partial") and dec.args:
+                if _dotted(dec.args[0]).endswith("jit"):
+                    info = JitInfo(set(), False)
+                    for kw in dec.keywords:
+                        if kw.arg == "static_argnames":
+                            info.static_argnames |= _const_strs(kw.value)
+                        if kw.arg == "donate_argnums":
+                            info.has_donate = True
+                    return info
+    return None
+
+
+# ---------------------------------------------------------------------------
+# staticness inference
+# ---------------------------------------------------------------------------
+
+class _Staticness:
+    """Intra-function static/traced classification of local names.
+
+    Conservative in the false-positive direction: names of unknown
+    provenance (globals, imports, unanalysed constructs) are *static*.
+    Only values that provably flow from non-static parameters or from
+    ``jnp/jax/pl`` calls are traced.
+    """
+
+    def __init__(self, fn: ast.FunctionDef, static_argnames: set[str]):
+        self.traced: set[str] = set()
+        args = fn.args
+        for a in (*args.posonlyargs, *args.args, *args.kwonlyargs):
+            if a.arg not in static_argnames and a.arg != "self":
+                self.traced.add(a.arg)
+        # fixpoint over assignments (two passes cover forward chains;
+        # loop bodies may need one more)
+        for _ in range(4):
+            before = set(self.traced)
+            self._scan(fn)
+            if self.traced == before:
+                break
+
+    # -- expression classification --------------------------------------
+    def is_traced(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.traced
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.is_traced(node.value)
+        if isinstance(node, ast.Call):
+            callee = _dotted(node.func)
+            root = callee.split(".")[0]
+            if root in _TRACED_ROOTS:
+                return True
+            if callee in _STATIC_CALLS or callee.endswith(".partial"):
+                return any(self.is_traced(a) for a in node.args) or any(
+                    self.is_traced(k.value) for k in node.keywords
+                )
+            if isinstance(node.func, ast.Attribute) and self.is_traced(
+                node.func.value
+            ):
+                return True  # method of a traced object (x.astype, ...)
+            return False  # unknown callee: assume static
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_traced(node.left) or self.is_traced(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_traced(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_traced(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            return self.is_traced(node.left) or any(
+                self.is_traced(c) for c in node.comparators
+            )
+        if isinstance(node, ast.Subscript):
+            return self.is_traced(node.value) or self.is_traced(node.slice)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.is_traced(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return (self.is_traced(node.body) or self.is_traced(node.test)
+                    or self.is_traced(node.orelse))
+        if isinstance(node, ast.Slice):
+            return any(
+                self.is_traced(p) for p in
+                (node.lower, node.upper, node.step) if p is not None
+            )
+        if isinstance(node, ast.Starred):
+            return self.is_traced(node.value)
+        return False  # lambdas, comprehensions, f-strings, ...: static
+
+    def traced_names(self, node: ast.AST) -> list[str]:
+        return sorted({
+            n.id for n in ast.walk(node)
+            if isinstance(n, ast.Name) and n.id in self.traced
+        })
+
+    # -- assignment scan -------------------------------------------------
+    def _mark(self, target: ast.AST, traced: bool):
+        if not traced:
+            return  # never un-trace: a name traced anywhere stays traced
+        if isinstance(target, ast.Name):
+            self.traced.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._mark(elt, traced)
+        elif isinstance(target, ast.Starred):
+            self._mark(target.value, traced)
+
+    def _scan(self, fn: ast.FunctionDef):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                t = self.is_traced(node.value)
+                for target in node.targets:
+                    self._mark(target, t)
+            elif isinstance(node, ast.AugAssign):
+                if self.is_traced(node.value) or self.is_traced(node.target):
+                    self._mark(node.target, True)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                self._mark(node.target, self.is_traced(node.value))
+            elif isinstance(node, ast.For):
+                self._mark(node.target, self.is_traced(node.iter))
+            elif isinstance(node, ast.withitem) and node.optional_vars:
+                self._mark(
+                    node.optional_vars, self.is_traced(node.context_expr)
+                )
+            elif isinstance(node, ast.FunctionDef) and node is not fn:
+                # nested function (scan body, helper): its parameters are
+                # traced — they receive scan carries / mapped operands
+                for a in (*node.args.posonlyargs, *node.args.args,
+                          *node.args.kwonlyargs):
+                    if a.arg != "self":
+                        self.traced.add(a.arg)
+
+
+# ---------------------------------------------------------------------------
+# per-file lint
+# ---------------------------------------------------------------------------
+
+def _rule_applies(rule: str, relpath: str) -> bool:
+    prefixes = RULE_PATHS.get(rule)
+    if prefixes is None:
+        return True
+    norm = relpath.replace(os.sep, "/")
+    return any(norm.startswith(p) or f"/{p}" in norm for p in prefixes)
+
+
+def _contains_scan(fn: ast.FunctionDef) -> int | None:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and _dotted(node.func).endswith(
+            "lax.scan"
+        ):
+            return node.lineno
+    return None
+
+
+def _lint_tree(tree: ast.Module, relpath: str,
+               registered_paths: set[str] | None) -> list[Finding]:
+    findings: list[Finding] = []
+
+    # unregistered-pallas-call (module granularity)
+    if _rule_applies("unregistered-pallas-call", relpath):
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and _dotted(node.func).endswith(
+                "pallas_call"
+            ):
+                norm = relpath.replace(os.sep, "/")
+                if registered_paths is not None and norm in registered_paths:
+                    continue
+                findings.append(Finding(
+                    relpath, node.lineno, "unregistered-pallas-call",
+                    "pallas_call not covered by the geometry checker "
+                    "registry — add a geometry.py registration "
+                    "(see analysis/pallas_check.py)",
+                ))
+
+    # promotion-hazard (anywhere, path-scoped)
+    if _rule_applies("promotion-hazard", relpath):
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _dotted(node.func)
+            parts = callee.split(".")
+            if len(parts) != 2 or parts[0] not in ("jnp", "np"):
+                continue
+            if parts[0] == "np":
+                continue  # host-side numpy: OCC tables etc. cast explicitly
+            fname = parts[1]
+            if fname not in _FACTORY_DTYPE_POS:
+                continue
+            has_dtype = any(k.arg == "dtype" for k in node.keywords) or (
+                len(node.args) > _FACTORY_DTYPE_POS[fname]
+            )
+            if not has_dtype:
+                findings.append(Finding(
+                    relpath, node.lineno, "promotion-hazard",
+                    f"jnp.{fname} without an explicit dtype promotes to "
+                    f"int64/float64 under JAX_ENABLE_X64 (int64 iotas do "
+                    f"not lower on TPU) — pass dtype= explicitly",
+                ))
+
+    # function-scoped rules
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        info = _jit_info(fn)
+        if info is None:
+            continue
+
+        if _rule_applies("scan-donate", relpath) and not info.has_donate:
+            scan_line = _contains_scan(fn)
+            if scan_line is not None:
+                findings.append(Finding(
+                    relpath, fn.lineno, "scan-donate",
+                    f"jitted `{fn.name}` runs lax.scan (line {scan_line}) "
+                    f"but its jit has no donate_argnums — the carry is "
+                    f"rebuilt in fresh buffers every call; donate the "
+                    f"state pytree or suppress if callers reuse it",
+                ))
+
+        if not _rule_applies("tracer-leak", relpath):
+            continue
+        st = _Staticness(fn, info.static_argnames)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)) and st.is_traced(
+                node.test
+            ):
+                names = ", ".join(st.traced_names(node.test)) or "<expr>"
+                kind = "if" if isinstance(node, ast.If) else "while"
+                findings.append(Finding(
+                    relpath, node.lineno, "tracer-leak",
+                    f"Python `{kind}` on traced value(s) [{names}] inside "
+                    f"jitted `{fn.name}` — use jnp.where/lax.cond or make "
+                    f"the value a static_argname",
+                ))
+            elif (isinstance(node, ast.Call)
+                  and _dotted(node.func) in ("bool", "int", "float")
+                  and node.args and st.is_traced(node.args[0])):
+                names = ", ".join(st.traced_names(node.args[0])) or "<expr>"
+                findings.append(Finding(
+                    relpath, node.lineno, "tracer-leak",
+                    f"`{_dotted(node.func)}()` on traced value(s) "
+                    f"[{names}] inside jitted `{fn.name}` forces a "
+                    f"host sync / concretization error",
+                ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def _inline_suppressed(finding: Finding, lines: Sequence[str]) -> bool:
+    for ln in (finding.line, finding.line - 1):
+        if 1 <= ln <= len(lines):
+            m = _SUPPRESS_RE.search(lines[ln - 1])
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",")}
+                if finding.rule in rules or "*" in rules:
+                    return True
+    return False
+
+
+def load_allowlist(path: str) -> set[tuple[str, str]]:
+    """``<relpath>:<rule>`` lines; '#' comments and blanks ignored."""
+    allow: set[tuple[str, str]] = set()
+    if not os.path.exists(path):
+        return allow
+    with open(path) as f:
+        for raw in f:
+            line = raw.split("#", 1)[0].strip()
+            if not line:
+                continue
+            rel, _, rule = line.rpartition(":")
+            if rel and rule:
+                allow.add((rel.replace(os.sep, "/"), rule))
+    return allow
+
+
+DEFAULT_ALLOWLIST = os.path.join(os.path.dirname(__file__), "lint_allow.txt")
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+def lint_source(src: str, relpath: str,
+                registered_paths: set[str] | None = None,
+                allowlist: set[tuple[str, str]] | None = None
+                ) -> list[Finding]:
+    """Lint one source string (``relpath`` only labels findings and scopes
+    path-dependent rules)."""
+    tree = ast.parse(src, filename=relpath)
+    findings = _lint_tree(tree, relpath, registered_paths)
+    lines = src.splitlines()
+    allow = allowlist or set()
+    norm = relpath.replace(os.sep, "/")
+    return [
+        f for f in findings
+        if not _inline_suppressed(f, lines) and (norm, f.rule) not in allow
+    ]
+
+
+def iter_source_files(root: str,
+                      exclude_dirs: Iterable[str] = ("fixtures",
+                                                     "__pycache__")):
+    exclude = set(exclude_dirs)
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d not in exclude)
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                yield os.path.join(dirpath, fn)
+
+
+def lint_paths(root: str, files: Iterable[str] | None = None, *,
+               registered_paths: set[str] | None = None,
+               allowlist_path: str = DEFAULT_ALLOWLIST) -> list[Finding]:
+    """Lint ``files`` (default: every .py under ``root``, fixtures
+    excluded), reporting paths relative to ``root``."""
+    if files is None:
+        files = iter_source_files(root)
+    allow = load_allowlist(allowlist_path)
+    findings: list[Finding] = []
+    for path in files:
+        rel = os.path.relpath(path, root)
+        with open(path) as f:
+            src = f.read()
+        findings.extend(
+            lint_source(src, rel, registered_paths, allow)
+        )
+    return findings

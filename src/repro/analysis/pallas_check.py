@@ -1,0 +1,331 @@
+"""Pallas grid geometry checker: prove write disjointness, in-bounds
+tiling and declared-only aliasing for every registered kernel.
+
+Why static: the kernels are guarded dynamically (bit-exact jnp oracles,
+calib tolerance bands), but those run in *interpret mode on CPU*, where
+grid steps execute sequentially — an overlapping-output-block write race
+introduced by a BlockSpec/index_map edit is invisible until a real TPU
+run executes grid points concurrently and silently corrupts state.  This
+checker re-states each ``pallas_call`` declaratively and concretely
+enumerates the grid over the shapes the tests/benchmarks use, verifying:
+
+- **write disjointness** — output blocks touched by distinct grid points
+  are pairwise disjoint unless every differing grid axis is declared a
+  reduction axis (a sequential TPU axis whose partial results live in
+  scratch and whose output block is written once, e.g. the k-block axis
+  of flash attention);
+- **in-bounds tiling** — every block of every ref lies inside its array,
+  or the kernel declares an in-kernel mask for that (ref, dim) edge;
+- **no undeclared aliasing** — refs sharing a buffer are only allowed as
+  a declared ``input_output_aliases`` pair, and a declared pair must
+  tile identically (same array/block shape, index maps agreeing on every
+  grid point) so the in-place update is well defined.
+
+Registration: each kernel package ships a ``geometry.py`` module whose
+provider is decorated with ``@register("<kernel>")`` and returns one
+``KernelGeometry`` per concrete shape case.  ``load_registry()`` imports
+every ``repro.kernels.<pkg>.geometry`` module it can find; the jaxlint
+``unregistered-pallas-call`` rule closes the loop by failing any module
+that calls ``pallas_call`` without a registration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import itertools
+import os
+from typing import Callable, Mapping, Sequence
+
+#: hard cap on concrete grid enumeration — registered cases use test/bench
+#: shapes, which are tiny; hitting this means a spec registered a
+#: production-sized grid by mistake.
+MAX_GRID_POINTS = 200_000
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockDecl:
+    """One ref of a ``pallas_call``: the array as the wrapper passes it
+    (post-padding) plus its BlockSpec.
+
+    ``block_shape``/``index_map`` of ``None`` mean an unblocked ref (the
+    whole array is the block, e.g. a scalar-prefetch SMEM ref).
+    ``masked_dims`` declares dims whose out-of-bounds tail is masked
+    inside the kernel body.  ``buffer`` names the backing buffer; decls
+    sharing a name alias each other and must be declared in
+    ``KernelGeometry.aliases``.
+    """
+
+    name: str
+    array_shape: tuple[int, ...]
+    block_shape: tuple[int, ...] | None = None
+    index_map: Callable[..., tuple[int, ...]] | None = None
+    masked_dims: frozenset[int] = frozenset()
+    buffer: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelGeometry:
+    """Declarative restatement of one concrete ``pallas_call``."""
+
+    kernel: str                     # registry name, e.g. "flash_attention"
+    module: str                     # module that owns the pallas_call
+    case: str                       # label for this shape set
+    grid: tuple[int, ...]
+    inputs: tuple[BlockDecl, ...]
+    outputs: tuple[BlockDecl, ...]
+    #: grid axes that are sequential accumulation axes: their partial
+    #: results live in scratch and the output block is written once, so
+    #: grid points differing only on these axes may map to the same
+    #: output block.
+    reduction_axes: frozenset[int] = frozenset()
+    #: declared input→output aliases (``input_output_aliases``).
+    aliases: Mapping[int, int] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "aliases", dict(self.aliases))
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    kind: str       # "write-race" | "oob" | "alias" | "spec"
+    kernel: str
+    case: str
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.kind}] {self.kernel}/{self.case}: {self.detail}"
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], Sequence[KernelGeometry]]] = {}
+
+
+def register(name: str):
+    """Decorator: register a zero-arg provider returning the kernel's
+    concrete ``KernelGeometry`` cases."""
+
+    def deco(fn: Callable[[], Sequence[KernelGeometry]]):
+        if name in _REGISTRY and _REGISTRY[name] is not fn:
+            raise ValueError(f"kernel {name!r} registered twice")
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def load_registry() -> dict[str, Callable[[], Sequence[KernelGeometry]]]:
+    """Import every ``repro.kernels.<pkg>.geometry`` module and return the
+    populated registry.  Kernel packages are plain directories (some are
+    namespace packages without ``__init__.py``), so discovery walks the
+    package path rather than ``pkgutil`` (which skips namespace portions).
+    """
+    import repro.kernels as kernels_pkg
+
+    for root in kernels_pkg.__path__:
+        for name in sorted(os.listdir(root)):
+            if not os.path.isfile(os.path.join(root, name, "geometry.py")):
+                continue
+            try:
+                importlib.import_module(f"repro.kernels.{name}.geometry")
+            except ModuleNotFoundError as e:
+                # only tolerate a *missing geometry module* (jaxlint flags
+                # the gap); a broken import inside one must raise
+                if e.name != f"repro.kernels.{name}.geometry":
+                    raise
+    return dict(_REGISTRY)
+
+
+def registered_modules() -> set[str]:
+    """Module paths covered by the registry (for the jaxlint
+    ``unregistered-pallas-call`` rule)."""
+    mods = set()
+    for provider in load_registry().values():
+        for g in provider():
+            mods.add(g.module)
+    return mods
+
+
+# ---------------------------------------------------------------------------
+# checks
+# ---------------------------------------------------------------------------
+
+def _grid_points(grid: tuple[int, ...]):
+    total = 1
+    for g in grid:
+        total *= g
+    if total > MAX_GRID_POINTS:
+        raise ValueError(
+            f"grid {grid} has {total} points > MAX_GRID_POINTS "
+            f"({MAX_GRID_POINTS}); register a test-sized case"
+        )
+    return itertools.product(*(range(g) for g in grid))
+
+
+def _block_index(decl: BlockDecl, point: tuple[int, ...]) -> tuple[int, ...]:
+    if decl.index_map is None:
+        return (0,) * len(decl.array_shape)
+    idx = tuple(int(i) for i in decl.index_map(*point))
+    if len(idx) != len(decl.block_shape or decl.array_shape):
+        raise ValueError(
+            f"{decl.name}: index_map arity {len(idx)} != block rank"
+        )
+    return idx
+
+
+def _check_spec(g: KernelGeometry) -> list[Violation]:
+    """Structural sanity of the declaration itself."""
+    out = []
+    for decl in (*g.inputs, *g.outputs):
+        if decl.block_shape is not None and (
+            len(decl.block_shape) != len(decl.array_shape)
+        ):
+            out.append(Violation(
+                "spec", g.kernel, g.case,
+                f"{decl.name}: block rank {len(decl.block_shape)} != "
+                f"array rank {len(decl.array_shape)}",
+            ))
+    for i_idx, o_idx in g.aliases.items():
+        if not (0 <= i_idx < len(g.inputs) and 0 <= o_idx < len(g.outputs)):
+            out.append(Violation(
+                "spec", g.kernel, g.case,
+                f"alias {i_idx}->{o_idx} out of range",
+            ))
+    return out
+
+
+def _check_oob(g: KernelGeometry) -> list[Violation]:
+    out = []
+    for decl in (*g.inputs, *g.outputs):
+        if decl.block_shape is None:
+            continue
+        seen: set[tuple[int, ...]] = set()
+        for p in _grid_points(g.grid):
+            idx = _block_index(decl, p)
+            if idx in seen:
+                continue
+            seen.add(idx)
+            for d, (i, b, n) in enumerate(
+                zip(idx, decl.block_shape, decl.array_shape)
+            ):
+                if i < 0 or i * b + b > n:
+                    if d in decl.masked_dims:
+                        continue
+                    out.append(Violation(
+                        "oob", g.kernel, g.case,
+                        f"{decl.name}: block index {idx} at grid point {p} "
+                        f"spans [{i * b}, {i * b + b}) on dim {d} of an "
+                        f"array of extent {n} with no declared mask",
+                    ))
+                    break
+    return out
+
+
+def _check_write_race(g: KernelGeometry) -> list[Violation]:
+    out = []
+    red = g.reduction_axes
+    for decl in g.outputs:
+        groups: dict[tuple[int, ...], set[tuple[int, ...]]] = {}
+        for p in _grid_points(g.grid):
+            idx = _block_index(decl, p)
+            key = tuple(c for a, c in enumerate(p) if a not in red)
+            groups.setdefault(idx, set()).add(key)
+        for idx, keys in groups.items():
+            if len(keys) > 1:
+                a, b = sorted(keys)[:2]
+                out.append(Violation(
+                    "write-race", g.kernel, g.case,
+                    f"{decl.name}: output block {idx} is written by "
+                    f"{len(keys)} grid points that differ on "
+                    f"non-reduction axes (e.g. {a} vs {b}); distinct "
+                    f"grid points must write disjoint output blocks",
+                ))
+    return out
+
+
+def _check_alias(g: KernelGeometry) -> list[Violation]:
+    out = []
+    declared = {(i, o) for i, o in g.aliases.items()}
+    # undeclared sharing: any input buffer that also backs an output
+    for ii, i_decl in enumerate(g.inputs):
+        if i_decl.buffer is None:
+            continue
+        for oi, o_decl in enumerate(g.outputs):
+            if o_decl.buffer != i_decl.buffer:
+                continue
+            if (ii, oi) not in declared:
+                out.append(Violation(
+                    "alias", g.kernel, g.case,
+                    f"input {i_decl.name} aliases output {o_decl.name} "
+                    f"(buffer {i_decl.buffer!r}) without a declared "
+                    f"input_output_alias",
+                ))
+    # declared aliases must tile identically
+    for ii, oi in declared:
+        if not (0 <= ii < len(g.inputs) and 0 <= oi < len(g.outputs)):
+            continue  # reported by _check_spec
+        i_decl, o_decl = g.inputs[ii], g.outputs[oi]
+        if (i_decl.array_shape != o_decl.array_shape
+                or i_decl.block_shape != o_decl.block_shape):
+            out.append(Violation(
+                "alias", g.kernel, g.case,
+                f"declared alias {i_decl.name}->{o_decl.name} has "
+                f"mismatched array/block shapes",
+            ))
+            continue
+        for p in _grid_points(g.grid):
+            if _block_index(i_decl, p) != _block_index(o_decl, p):
+                out.append(Violation(
+                    "alias", g.kernel, g.case,
+                    f"declared alias {i_decl.name}->{o_decl.name}: index "
+                    f"maps disagree at grid point {p} — the in-place "
+                    f"update would read and write different tiles",
+                ))
+                break
+    return out
+
+
+def check_geometry(g: KernelGeometry) -> list[Violation]:
+    v = _check_spec(g)
+    if v:
+        return v  # structural errors make the other checks meaningless
+    return _check_oob(g) + _check_write_race(g) + _check_alias(g)
+
+
+def check_all(
+    providers: Mapping[str, Callable[[], Sequence[KernelGeometry]]] | None
+    = None,
+) -> dict:
+    """Run every registered kernel's cases; return a JSON-able report."""
+    if providers is None:
+        providers = load_registry()
+    kernels = {}
+    violations: list[Violation] = []
+    for name in sorted(providers):
+        cases = list(providers[name]())
+        n_points = 0
+        case_names = []
+        for g in cases:
+            pts = 1
+            for axis in g.grid:
+                pts *= axis
+            n_points += pts
+            case_names.append(g.case)
+            violations.extend(check_geometry(g))
+        kernels[name] = {
+            "cases": case_names,
+            "grid_points_checked": n_points,
+            "violations": [
+                str(v) for v in violations if v.kernel == name
+            ],
+        }
+    return {
+        "ok": not violations,
+        "n_kernels": len(kernels),
+        "n_violations": len(violations),
+        "kernels": kernels,
+        "violations": [dataclasses.asdict(v) for v in violations],
+    }

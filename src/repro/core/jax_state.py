@@ -26,7 +26,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import checkify
 
+from repro.analysis import sanitize as _sanitize
 from repro.core.tasks import ALL_CONFIGS, DEVICE_CORES
 
 BIG = 1e30
@@ -101,7 +103,8 @@ def _csum(x):
     broadcast/compare/reduce ops, so the same code lowers inside a Pallas
     kernel body (jnp.cumsum does not)."""
     n = x.shape[-1]
-    tril = jnp.arange(n)[:, None] <= jnp.arange(n)[None, :]   # k <= w
+    tril = (jnp.arange(n, dtype=jnp.int32)[:, None]
+            <= jnp.arange(n, dtype=jnp.int32)[None, :])   # k <= w
     return jnp.sum(jnp.where(tril, x[..., :, None], 0), axis=-2)
 
 
@@ -126,7 +129,7 @@ def _trim_tracks(t1, t2, valid, s, e, md, active):
     with the drop tallies reduced over the window axis.
     """
     W = t1.shape[-1]
-    lanes = jnp.arange(W)
+    lanes = jnp.arange(W, dtype=jnp.int32)
     ov = valid & (t1 < e) & (s < t2) & active
     left_t2 = jnp.minimum(t2, s)
     right_t1 = jnp.maximum(t1, e)
@@ -163,7 +166,7 @@ def _trim_tracks(t1, t2, valid, s, e, md, active):
 
 
 def fanout_commit(t1, t2, valid, min_dur, dev, cfg, s, e, do, *,
-                  kernel_safe: bool = False):
+                  kernel_safe: bool = False, sanitize: bool = False):
     """Batched §IV.A.1 fan-out commit: consume ``[s, e)`` on device
     ``dev`` across every config list, trimming the ``OCC_TABLE[cfg, ci]``
     most-overlapping tracks of each list ``ci`` (multi-remainder).
@@ -186,7 +189,8 @@ def fanout_commit(t1, t2, valid, min_dur, dev, cfg, s, e, do, *,
       subset that lowers inside the Pallas placement kernel body.
     """
     N, n_dev, n_cfg, T, W = t1.shape
-    dev_oh = jnp.arange(n_dev)[None, :] == dev[:, None]        # [N, Dev]
+    dev_oh = (jnp.arange(n_dev, dtype=jnp.int32)[None, :]
+              == dev[:, None])                                 # [N, Dev]
     if kernel_safe:
         gather = lambda a, fill: jnp.sum(
             jnp.where(dev_oh[:, :, None, None, None], a, fill), axis=1
@@ -206,7 +210,7 @@ def fanout_commit(t1, t2, valid, min_dur, dev, cfg, s, e, do, *,
     ol = jnp.where(ov, jnp.minimum(t2d, eb) - jnp.maximum(t1d, sb), 0.0)
     ol = ol.sum(axis=-1)                                       # [N, CFG, T]
     # stable descending rank of tracks by overlap (first index wins ties)
-    track_ids = jnp.arange(T)
+    track_ids = jnp.arange(T, dtype=jnp.int32)
     beats = (ol[..., None, :] > ol[..., :, None]) | (
         (ol[..., None, :] == ol[..., :, None])
         & (track_ids[None, :] < track_ids[:, None])
@@ -216,7 +220,7 @@ def fanout_commit(t1, t2, valid, min_dur, dev, cfg, s, e, do, *,
     # OCC_TABLE by the (data-dependent) committed config.  Unrolled over
     # the tiny static table with scalar constants only, so no array
     # constant is captured when this traces inside the Pallas kernel.
-    list_ids = jnp.arange(n_cfg)[None, :]
+    list_ids = jnp.arange(n_cfg, dtype=jnp.int32)[None, :]
     occ = jnp.zeros((N, n_cfg), jnp.int32)
     for ti in range(n_cfg):
         for li in range(n_cfg):
@@ -238,13 +242,27 @@ def fanout_commit(t1, t2, valid, min_dur, dev, cfg, s, e, do, *,
         out_t2 = jnp.where(sel, nt2[:, None], t2)
         out_valid = jnp.where(sel, nv[:, None], valid)
     else:
-        rows = jnp.arange(N)
+        rows = jnp.arange(N, dtype=jnp.int32)
         dom = do[:, None, None, None]
         out_t1 = t1.at[rows, dev].set(jnp.where(dom, nt1, t1d))
         out_t2 = t2.at[rows, dev].set(jnp.where(dom, nt2, t2d))
         out_valid = valid.at[rows, dev].set(jnp.where(dom, nv, vd))
-    n_drop = jnp.where(do, n_drop.sum(axis=(1, 2)), 0)
+    # explicit accumulator dtype: integer jnp.sum promotes to the default
+    # int (int64 under JAX_ENABLE_X64), which does not lower on TPU
+    n_drop = jnp.where(do, n_drop.sum(axis=(1, 2), dtype=jnp.int32), 0)
     t_drop = jnp.where(do, t_drop.sum(axis=(1, 2)), 0.0)
+    if sanitize:
+        # checkify invariants (only valid under a checkify.checkify
+        # transform, and never with kernel_safe=True — checks cannot
+        # lower inside a Pallas kernel body)
+        _sanitize.check_windows(out_t1, out_t2, out_valid, "fanout_commit")
+        _sanitize.check_no_avail_increase(
+            _sanitize.total_availability(t1, t2, valid, batch_axes=1),
+            _sanitize.total_availability(
+                out_t1, out_t2, out_valid, batch_axes=1
+            ),
+            "fanout_commit",
+        )
     return out_t1, out_t2, out_valid, n_drop, t_drop
 
 
@@ -265,7 +283,7 @@ def compact_tracks(t1, t2, valid, *, eps: float = 1e-6):
     )
     starts_seg = vs & (t1s > prev_end + eps)
     seg = _csum(starts_seg.astype(jnp.int32)) - 1
-    lanes = jnp.arange(W)
+    lanes = jnp.arange(W, dtype=jnp.int32)
     member = vs[..., None] & (seg[..., None] == lanes)         # [..., W, W]
     head = starts_seg[..., None] & (seg[..., None] == lanes)
     new_valid = jnp.any(member, axis=-2)
@@ -307,7 +325,8 @@ def _device_slot(state: SchedState, dev, cfg_idx, q1, deadline, dur):
 
 
 def _bisect(state: SchedState, dev, cfg_idx, track, slot, s, e,
-            do=True) -> tuple[SchedState, jnp.ndarray]:
+            do=True, *, sanitize: bool = False
+            ) -> tuple[SchedState, jnp.ndarray]:
     """Consume [s, e) from device ``dev`` across EVERY config list (the
     §IV.A.1 fan-out write) for a committed task of config ``cfg_idx``,
     keeping ALL min-duration remainders (multi-remainder form — the exact
@@ -328,32 +347,81 @@ def _bisect(state: SchedState, dev, cfg_idx, track, slot, s, e,
         jnp.asarray(s, jnp.float32)[None],
         jnp.asarray(e, jnp.float32)[None],
         jnp.asarray(do, bool)[None],
+        sanitize=sanitize,
     )
     return state._replace(
         win_t1=t1[0], win_t2=t2[0], win_valid=valid[0]
     ), n_drop[0]
 
 
-@functools.partial(jax.jit, static_argnames=("cfg_idx",))
-def hp_place(state: SchedState, dev, now, *, cfg_idx: int = 0):
+@functools.partial(jax.jit, static_argnames=("cfg_idx", "sanitize"))
+def hp_place_jit(state: SchedState, dev, now, *, cfg_idx: int = 0,
+                 sanitize: bool = False):
     """High-priority placement (§IV.B.1): strict containment of
-    [now, now+dur) on the source device, committed in one XLA program."""
+    [now, now+dur) on the source device, committed in one XLA program.
+    ``sanitize=True`` traces the checkify invariants into the program
+    (only valid under a ``checkify.checkify`` transform); the default
+    trace carries no checks and stays byte-identical to the old build."""
+    if sanitize:
+        _sanitize.check_sched_state(state, "hp_place input")
+        before = _sanitize.total_availability(
+            state.win_t1, state.win_t2, state.win_valid
+        )
     dur = state.min_dur[cfg_idx]
     found, track, slot, start = _device_slot(
         state, dev, cfg_idx, now, now + dur + 1e-6, dur
     )
     new_state, _ = _bisect(
-        state, dev, cfg_idx, track, slot, start, start + dur, do=found
+        state, dev, cfg_idx, track, slot, start, start + dur, do=found,
+        sanitize=sanitize,
     )
+    if sanitize:
+        _sanitize.check_sched_state(new_state, "hp_place output")
+        _sanitize.check_no_avail_increase(
+            before,
+            _sanitize.total_availability(
+                new_state.win_t1, new_state.win_t2, new_state.win_valid
+            ),
+            "hp_place",
+        )
     return found, start, new_state
 
 
-@functools.partial(jax.jit, static_argnames=("cfg_idx", "n_tasks"))
-def lp_place(state: SchedState, src_dev, now, deadline, *,
-             cfg_idx: int = 1, n_tasks: int = 1):
+@functools.lru_cache(maxsize=None)
+def _hp_place_checked(cfg_idx: int):
+    fn = functools.partial(hp_place_jit, cfg_idx=cfg_idx, sanitize=True)
+    return checkify.checkify(fn, errors=checkify.user_checks)
+
+
+def hp_place(state: SchedState, dev, now, *, cfg_idx: int = 0):
+    """Public HP placement: dispatches to the checkify-sanitized variant
+    when ``REPRO_SANITIZE=1`` (repro.analysis.sanitize), raising
+    ``checkify.JaxRuntimeError`` on an invariant trip; otherwise runs the
+    check-free jitted program (``hp_place_jit``)."""
+    if _sanitize.enabled():
+        err, out = _hp_place_checked(cfg_idx)(state, dev, now)
+        err.throw()
+        return out
+    return hp_place_jit(state, dev, now, cfg_idx=cfg_idx)
+
+
+# Donation is deliberately withheld: callers (calib harness, fleet replay)
+# reuse the input SchedState after the call, so donating the carry would
+# invalidate buffers they still hold.
+@functools.partial(jax.jit, static_argnames=("cfg_idx", "n_tasks", "sanitize"))
+def lp_place_jit(state: SchedState, src_dev, now, deadline, *,  # repro: lint-ok(scan-donate)
+                 cfg_idx: int = 1, n_tasks: int = 1,
+                 sanitize: bool = False):
     """Low-priority request (§IV.B.2): reserve a link slot per task, run the
     multi-containment query across all devices, prefer the source device,
-    commit each placement — all inside one jitted scan."""
+    commit each placement — all inside one jitted scan.  ``sanitize=True``
+    traces the checkify invariants (only valid under a
+    ``checkify.checkify`` transform)."""
+    if sanitize:
+        _sanitize.check_sched_state(state, "lp_place input")
+        before = _sanitize.total_availability(
+            state.win_t1, state.win_t2, state.win_valid
+        )
     dur = state.min_dur[cfg_idx]
     n_dev = state.win_t1.shape[0]
 
@@ -370,25 +438,62 @@ def lp_place(state: SchedState, src_dev, now, deadline, *,
         # multi-containment across every device
         founds, tracks, slots, starts = jax.vmap(
             lambda d: _device_slot(st, d, cfg_idx, now, deadline, dur)
-        )(jnp.arange(n_dev))
+        )(jnp.arange(n_dev, dtype=jnp.int32))
         # remote devices cannot start before their transfer lands
         starts_adj = jnp.where(
-            jnp.arange(n_dev) == src_dev, starts, jnp.maximum(starts, comm_end)
+            jnp.arange(n_dev, dtype=jnp.int32) == src_dev,
+            starts, jnp.maximum(starts, comm_end)
         )
         feasible = founds & (starts_adj + dur <= deadline)
-        feasible &= (jnp.arange(n_dev) == src_dev) | comm_ok
+        feasible &= (jnp.arange(n_dev, dtype=jnp.int32) == src_dev) | comm_ok
         # prefer source device, then earliest start
         key = jnp.where(feasible, starts_adj, BIG)
-        key = key - jnp.where(jnp.arange(n_dev) == src_dev, 1e-3, 0.0)
+        key = key - jnp.where(
+            jnp.arange(n_dev, dtype=jnp.int32) == src_dev, 1e-3, 0.0
+        )
         d = jnp.argmin(key)
         ok = feasible[d]
         start = starts_adj[d]
         st, _ = _bisect(st, d, cfg_idx, tracks[d], slots[d], start,
-                        start + dur, do=ok)
+                        start + dur, do=ok, sanitize=sanitize)
         return (st, n_ok + ok.astype(jnp.int32)), (ok, d, start)
 
     (state, n_ok), (oks, devs, starts) = jax.lax.scan(
         place_one, (state, jnp.asarray(0, jnp.int32)), None, length=n_tasks
     )
     all_ok = n_ok == n_tasks
+    if sanitize:
+        _sanitize.check_sched_state(state, "lp_place output")
+        _sanitize.check_no_avail_increase(
+            before,
+            _sanitize.total_availability(
+                state.win_t1, state.win_t2, state.win_valid
+            ),
+            "lp_place",
+        )
     return all_ok, oks, devs, starts, state
+
+
+@functools.lru_cache(maxsize=None)
+def _lp_place_checked(cfg_idx: int, n_tasks: int):
+    fn = functools.partial(
+        lp_place_jit, cfg_idx=cfg_idx, n_tasks=n_tasks, sanitize=True
+    )
+    return checkify.checkify(fn, errors=checkify.user_checks)
+
+
+def lp_place(state: SchedState, src_dev, now, deadline, *,
+             cfg_idx: int = 1, n_tasks: int = 1):
+    """Public LP placement: dispatches to the checkify-sanitized variant
+    when ``REPRO_SANITIZE=1`` (repro.analysis.sanitize), raising
+    ``checkify.JaxRuntimeError`` on an invariant trip; otherwise runs the
+    check-free jitted program (``lp_place_jit``)."""
+    if _sanitize.enabled():
+        err, out = _lp_place_checked(cfg_idx, n_tasks)(
+            state, src_dev, now, deadline
+        )
+        err.throw()
+        return out
+    return lp_place_jit(
+        state, src_dev, now, deadline, cfg_idx=cfg_idx, n_tasks=n_tasks
+    )

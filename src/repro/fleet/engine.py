@@ -82,7 +82,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import checkify
 
+from repro.analysis import sanitize as _sanitize
 from repro.core.jax_state import (
     BIG, SchedState, compact_state, fanout_commit,
 )
@@ -169,7 +171,9 @@ def _vc_commit(vc, ok, sel, start, end, deadline, src):
     """Record a committed LP placement in the per-device victim cache."""
     vc_s, vc_end, vc_dl, vc_src, vc_ok = vc
     n_dev = vc_end.shape[1]
-    hit = ok[:, None] & (jnp.arange(n_dev)[None, :] == sel[:, None])
+    hit = ok[:, None] & (
+        jnp.arange(n_dev, dtype=jnp.int32)[None, :] == sel[:, None]
+    )
     return (
         jnp.where(hit, start[:, None], vc_s),
         jnp.where(hit, end[:, None], vc_end),
@@ -179,22 +183,22 @@ def _vc_commit(vc, ok, sel, start, end, deadline, src):
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("params",), donate_argnums=(0,)
-)
-def _run_segment(carry, values, bw_scale, f0, n_frames, *,
-                 params: FleetParams):
-    """One jitted scan over a ``[S, B, Dev]`` trace segment.  ``f0`` is
+def _segment_impl(carry, values, bw_scale, f0, n_frames, *,
+                  params: FleetParams, sanitize: bool = False):
+    """One scan over a ``[S, B, Dev]`` trace segment.  ``f0`` is
     the segment's global frame offset and ``n_frames`` the true trace
     length — ticks with ``f0 + i >= n_frames`` are masked to exact no-ops
-    (padding), so segmented and unsegmented runs are bit-identical.  The
-    carry is donated: buffers update in place across segments."""
+    (padding), so segmented and unsegmented runs are bit-identical.
+    ``sanitize=True`` traces per-tick checkify invariants (only valid
+    under a ``checkify.checkify`` transform)."""
     p = params
     B = carry[0].win_t1.shape[0]
     n_dev = p.n_devices
     R = p.requeue_slots
-    dev_ids = jnp.arange(n_dev)
-    rows = jnp.arange(B)
+    dev_ids = jnp.arange(n_dev, dtype=jnp.int32)
+    rows = jnp.arange(B, dtype=jnp.int32)
+    if sanitize:
+        _sanitize.check_sched_state(carry[0], "fleet segment input")
 
     def frame_step(carry, xs):
         st0, link_free0, rq0, vc0, stats0 = carry
@@ -407,6 +411,20 @@ def _run_segment(carry, values, bw_scale, f0, n_frames, *,
                 frames_completed=stats.frames_completed
                 + (has_frame & frame_ok)
             )
+        if sanitize:
+            _sanitize.check_windows(
+                st.win_t1, st.win_t2, st.win_valid, "fleet tick"
+            )
+            _sanitize.check(
+                jnp.all(~vc_ok | (vc_s <= vc_end)),
+                "victim cache corrupt (fleet tick): a live entry has "
+                "start > end",
+            )
+            _sanitize.check(
+                jnp.all(link_free >= 0.0),
+                "negative link_free (fleet tick): {lf}",
+                lf=jnp.min(link_free),
+            )
         new = (st, link_free, (rq_dl, rq_src, rq_ok),
                (vc_s, vc_end, vc_dl, vc_src, vc_ok), stats)
         # mask padded ticks (beyond the true trace) to exact no-ops so a
@@ -421,6 +439,27 @@ def _run_segment(carry, values, bw_scale, f0, n_frames, *,
     xs = (f0 + jnp.arange(S, dtype=jnp.int32),
           values.astype(jnp.int32), bw_scale.astype(jnp.float32))
     return jax.lax.scan(frame_step, carry, xs)[0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("params",), donate_argnums=(0,)
+)
+def _run_segment(carry, values, bw_scale, f0, n_frames, *,
+                 params: FleetParams):
+    """Fast path: the jitted segment scan with a donated carry (buffers
+    update in place across segments)."""
+    return _segment_impl(
+        carry, values, bw_scale, f0, n_frames, params=params
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _run_segment_checked(params: FleetParams):
+    """Checkify-sanitized segment scan (``REPRO_SANITIZE=1``).  The carry
+    is deliberately NOT donated: the discharged error value aliases the
+    inputs, and sanitized runs trade speed for checks anyway."""
+    fn = functools.partial(_segment_impl, params=params, sanitize=True)
+    return jax.jit(checkify.checkify(fn, errors=checkify.user_checks))
 
 
 def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
@@ -465,11 +504,17 @@ def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
         init_stats(B),
     ))
     nf = jnp.asarray(F, jnp.int32)
+    sanitized = _sanitize.enabled()
     for i in range(n_seg):
-        carry = _run_segment(
+        seg_args = (
             carry, values[i * S:(i + 1) * S], bw_scale[i * S:(i + 1) * S],
-            jnp.asarray(i * S, jnp.int32), nf, params=p,
+            jnp.asarray(i * S, jnp.int32), nf,
         )
+        if sanitized:
+            err, carry = _run_segment_checked(p)(*seg_args)
+            err.throw()
+        else:
+            carry = _run_segment(*seg_args, params=p)
     sched, link_free, rq, vc, stats = carry
     out = FleetState(
         sched=sched, link_free=link_free,

@@ -1,0 +1,51 @@
+"""Geometry registration for the flash-attention kernel.
+
+Declarative restatement of the ``pallas_call`` in flash_attention.py for
+the shapes the tests sweep: grid ``(B, H, nq, nk)``; the k-block axis
+(3) is the sequential reduction axis — (m, l, acc) carry in VMEM scratch
+and the output block is written once on the final k-step, so every nk
+grid point legitimately maps to the same output block.  The kv BlockSpec
+maps q-head ``h`` to ``h // group`` (GQA): a *read* fan-in, never a
+write, so it needs no declaration beyond the input spec itself.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.pallas_check import BlockDecl, KernelGeometry, register
+
+_MODULE = "repro.kernels.flash_attention.flash_attention"
+
+
+def _case(B, H, K, S, hd, bq, bk):
+    group = H // K
+    nq, nk = S // bq, S // bk
+    return KernelGeometry(
+        kernel="flash_attention", module=_MODULE,
+        case=f"B{B}H{H}K{K}S{S}hd{hd}bq{bq}bk{bk}",
+        grid=(B, H, nq, nk),
+        inputs=(
+            BlockDecl("q", (B, H, S, hd), (1, 1, bq, hd),
+                      lambda b, h, iq, ik: (b, h, iq, 0)),
+            BlockDecl("k", (B, K, S, hd), (1, 1, bk, hd),
+                      lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            BlockDecl("v", (B, K, S, hd), (1, 1, bk, hd),
+                      lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ),
+        outputs=(
+            BlockDecl("o", (B, H, S, hd), (1, 1, bq, hd),
+                      lambda b, h, iq, ik: (b, h, iq, 0)),
+        ),
+        reduction_axes=frozenset({3}),
+    )
+
+
+@register("flash_attention")
+def geometries():
+    # the test-sweep shapes (tests/test_kernels.py), incl. GQA/MQA and
+    # rectangular blocks
+    return [
+        _case(1, 4, 2, 128, 64, 64, 64),
+        _case(2, 2, 1, 256, 32, 128, 64),
+        _case(1, 8, 8, 128, 128, 128, 128),
+        _case(1, 4, 4, 64, 64, 64, 64),
+    ]

@@ -20,8 +20,8 @@ def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
     s *= hd ** -0.5
     if softcap > 0:
         s = jnp.tanh(s / softcap) * softcap
-    qp = jnp.arange(S)[:, None]
-    kp = jnp.arange(S)[None, :]
+    qp = jnp.arange(S, dtype=jnp.int32)[:, None]
+    kp = jnp.arange(S, dtype=jnp.int32)[None, :]
     mask = jnp.ones((S, S), bool)
     if causal:
         mask &= qp >= kp

@@ -1,0 +1,48 @@
+"""Geometry registration for the flash-decode kernel.
+
+Grid ``(B, K, n_s_blocks)``; the cache-block axis (2) is the sequential
+reduction axis (online-softmax carry in scratch, output written on the
+final block).  ``pos`` is an unblocked scalar-prefetch SMEM ref
+(``block_shape=None``).  Cache positions beyond ``pos`` are masked inside
+the kernel, but the *tiling* itself is exact (S % block_s == 0 asserted
+by the wrapper), so no masked dims are declared.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.pallas_check import BlockDecl, KernelGeometry, register
+
+_MODULE = "repro.kernels.flash_decode.flash_decode"
+
+
+def _case(B, H, K, S, hd, bs):
+    G = H // K
+    nb = S // bs
+    return KernelGeometry(
+        kernel="flash_decode", module=_MODULE,
+        case=f"B{B}H{H}K{K}S{S}hd{hd}bs{bs}",
+        grid=(B, K, nb),
+        inputs=(
+            BlockDecl("pos", (B,)),                     # SMEM, unblocked
+            BlockDecl("q", (B, K, G, hd), (1, 1, G, hd),
+                      lambda b, h, i: (b, h, 0, 0)),
+            BlockDecl("k_cache", (B, K, S, hd), (1, 1, bs, hd),
+                      lambda b, h, i: (b, h, i, 0)),
+            BlockDecl("v_cache", (B, K, S, hd), (1, 1, bs, hd),
+                      lambda b, h, i: (b, h, i, 0)),
+        ),
+        outputs=(
+            BlockDecl("o", (B, K, G, hd), (1, 1, G, hd),
+                      lambda b, h, i: (b, h, 0, 0)),
+        ),
+        reduction_axes=frozenset({2}),
+    )
+
+
+@register("flash_decode")
+def geometries():
+    return [
+        _case(2, 8, 2, 256, 64, 128),
+        _case(1, 4, 4, 512, 128, 256),
+        _case(3, 2, 1, 128, 32, 64),
+    ]

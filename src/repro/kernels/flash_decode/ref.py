@@ -19,7 +19,7 @@ def decode_attention_ref(q, k_cache, v_cache, pos, *, softcap=0.0, window=0):
     s *= hd ** -0.5
     if softcap > 0:
         s = jnp.tanh(s / softcap) * softcap
-    idx = jnp.arange(S)[None, None, :]
+    idx = jnp.arange(S, dtype=jnp.int32)[None, None, :]
     ok = idx <= pos[:, None, None]
     if window > 0:
         ok &= (pos[:, None, None] - idx) < window

@@ -1,0 +1,63 @@
+"""Geometry registration for the fused placement kernel.
+
+The only kernel in the tree with ``input_output_aliases``: the window
+arrays (t1/t2/valid) are updated in place by the §IV.A.1 commit, so the
+three input refs share buffers with the first three outputs.  The
+declaration states those buffers explicitly; the checker verifies each
+aliased pair tiles identically (same block shape, index maps agreeing on
+every grid point) and that no *undeclared* pair shares a buffer — the
+exact edit that would silently corrupt fleet scheduler state.
+
+Shapes are post-padding: the wrapper pads B up to a multiple of
+``block_b`` with ``do=0`` replicas.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.pallas_check import BlockDecl, KernelGeometry, register
+
+_MODULE = "repro.kernels.placement.placement"
+
+
+def _case(B, Dev, CFG, T, W, block_b):
+    block_b = min(block_b, B)
+    Bp = B + (-B) % block_b
+    n = Bp // block_b
+    win = lambda name, buf=None: BlockDecl(
+        name, (Bp, Dev, CFG, T, W), (block_b, Dev, CFG, T, W),
+        lambda i: (i, 0, 0, 0, 0), buffer=buf,
+    )
+    devp = lambda name: BlockDecl(
+        name, (Bp, Dev), (block_b, Dev), lambda i: (i, 0)
+    )
+    cfgp = lambda name: BlockDecl(
+        name, (Bp, CFG), (block_b, CFG), lambda i: (i, 0)
+    )
+    rep = lambda name: BlockDecl(name, (Bp,), (block_b,), lambda i: (i,))
+    return KernelGeometry(
+        kernel="placement", module=_MODULE,
+        case=f"B{B}Dev{Dev}CFG{CFG}T{T}W{W}bb{block_b}",
+        grid=(n,),
+        inputs=(
+            devp("q1"), devp("dl"), rep("src"), rep("do"), cfgp("min_dur"),
+            win("t1", "win_t1"), win("t2", "win_t2"),
+            win("valid", "win_valid"),
+        ),
+        outputs=(
+            win("t1_out", "win_t1"), win("t2_out", "win_t2"),
+            win("valid_out", "win_valid"), rep("ok"), rep("sel"),
+            rep("start"), rep("dur"), rep("use4"), rep("drop"),
+        ),
+        # matches fused_place's input_output_aliases={5: 0, 6: 1, 7: 2}
+        aliases={5: 0, 6: 1, 7: 2},
+    )
+
+
+@register("placement")
+def geometries():
+    return [
+        # paper testbed geometry at the fleet-engine tile (block_b=8)
+        _case(8, 4, 3, 2, 16, 8),
+        _case(1, 4, 3, 2, 16, 8),       # B=1 calib path
+        _case(20, 4, 3, 2, 16, 8),      # padded: 20 -> 24, three tiles
+    ]

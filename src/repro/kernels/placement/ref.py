@@ -44,7 +44,7 @@ def _fused_place_math(t1, t2, valid, min_dur, q1, dl, src, do, *,
     input.
     """
     N, n_dev = q1.shape
-    dev_ids = jnp.arange(n_dev)
+    dev_ids = jnp.arange(n_dev, dtype=jnp.int32)
     per_cfg = []
     for ci in (cfg_pref, cfg_fallback):
         dur_c = min_dur[:, ci]                                 # [N]

@@ -1,0 +1,45 @@
+"""Geometry registration for the chunked Mamba-2 / SSD scan.
+
+Grid ``(B, nh, nc)``; like ssm_scan the chunk axis is sequential but
+each chunk writes its own y block (the recurrent state ``h`` carries in
+scratch), so the output map uses every grid axis and no reduction axis
+is declared.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.pallas_check import BlockDecl, KernelGeometry, register
+
+_MODULE = "repro.kernels.ssd_scan.ssd_scan"
+
+
+def _case(B, S, H, P, N, bh, chunk):
+    nh, nc = H // bh, S // chunk
+    return KernelGeometry(
+        kernel="ssd_scan", module=_MODULE,
+        case=f"B{B}S{S}H{H}P{P}N{N}bh{bh}c{chunk}",
+        grid=(B, nh, nc),
+        inputs=(
+            BlockDecl("x", (B, S, H, P), (1, chunk, bh, P),
+                      lambda b, h, c: (b, c, h, 0)),
+            BlockDecl("dt", (B, S, H), (1, chunk, bh),
+                      lambda b, h, c: (b, c, h)),
+            BlockDecl("A", (H,), (bh,), lambda b, h, c: (h,)),
+            BlockDecl("B", (B, S, N), (1, chunk, N),
+                      lambda b, h, c: (b, c, 0)),
+            BlockDecl("C", (B, S, N), (1, chunk, N),
+                      lambda b, h, c: (b, c, 0)),
+        ),
+        outputs=(
+            BlockDecl("y", (B, S, H, P), (1, chunk, bh, P),
+                      lambda b, h, c: (b, c, h, 0)),
+        ),
+    )
+
+
+@register("ssd_scan")
+def geometries():
+    return [
+        _case(1, 64, 8, 16, 16, 4, 32),
+        _case(2, 64, 4, 32, 16, 2, 32),
+    ]

@@ -1,0 +1,47 @@
+"""Geometry registration for the chunked Mamba-1 selective scan.
+
+Grid ``(B, nd, nc)``; the chunk axis (2) is sequential but the output
+block index map *uses* it (each chunk writes its own y block), so no
+reduction axis is declared — the state ``h`` in scratch is the only
+cross-chunk carry.  Every grid axis appears in the output index map ⇒
+write disjointness must hold exactly.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.pallas_check import BlockDecl, KernelGeometry, register
+
+_MODULE = "repro.kernels.ssm_scan.ssm_scan"
+
+
+def _case(B, S, di, N, bd, chunk):
+    nd, nc = di // bd, S // chunk
+    return KernelGeometry(
+        kernel="ssm_scan", module=_MODULE,
+        case=f"B{B}S{S}di{di}N{N}bd{bd}c{chunk}",
+        grid=(B, nd, nc),
+        inputs=(
+            BlockDecl("u", (B, S, di), (1, chunk, bd),
+                      lambda b, d, c: (b, c, d)),
+            BlockDecl("dt", (B, S, di), (1, chunk, bd),
+                      lambda b, d, c: (b, c, d)),
+            BlockDecl("A", (di, N), (bd, N), lambda b, d, c: (d, 0)),
+            BlockDecl("B", (B, S, N), (1, chunk, N),
+                      lambda b, d, c: (b, c, 0)),
+            BlockDecl("C", (B, S, N), (1, chunk, N),
+                      lambda b, d, c: (b, c, 0)),
+        ),
+        outputs=(
+            BlockDecl("y", (B, S, di), (1, chunk, bd),
+                      lambda b, d, c: (b, c, d)),
+        ),
+    )
+
+
+@register("ssm_scan")
+def geometries():
+    return [
+        _case(1, 64, 64, 8, 32, 32),
+        _case(2, 128, 128, 16, 128, 64),
+        _case(1, 32, 256, 16, 64, 32),
+    ]

@@ -1,0 +1,68 @@
+"""Geometry registration for the window-query kernels (unbatched +
+fleet-batched).
+
+Shapes are declared *post-padding*, exactly as the wrappers hand them to
+``pallas_call`` (the wrapper pads Dev up to a multiple of ``block_dev``
+with never-feasible windows), so in-bounds tiling must hold with no
+masked dims.  Both variants tile the device axis only; every grid point
+owns its own output block — any overlap is a race.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.pallas_check import BlockDecl, KernelGeometry, register
+
+_MODULE = "repro.kernels.window_query.window_query"
+
+
+def _unbatched(Dev, T, W, block_dev):
+    block_dev = min(block_dev, Dev)
+    Dp = Dev + (-Dev) % block_dev           # wrapper padding
+    n = Dp // block_dev
+    TW = T * W
+    return KernelGeometry(
+        kernel="window_query", module=_MODULE,
+        case=f"Dev{Dev}T{T}W{W}bd{block_dev}",
+        grid=(n,),
+        inputs=(
+            BlockDecl("t1", (Dp, TW), (block_dev, TW), lambda i: (i, 0)),
+            BlockDecl("t2", (Dp, TW), (block_dev, TW), lambda i: (i, 0)),
+            BlockDecl("valid", (Dp, TW), (block_dev, TW), lambda i: (i, 0)),
+        ),
+        outputs=(
+            BlockDecl("start", (Dp,), (block_dev,), lambda i: (i,)),
+            BlockDecl("found", (Dp,), (block_dev,), lambda i: (i,)),
+        ),
+    )
+
+
+def _batched(B, Dev, T, W, block_dev):
+    block_dev = min(block_dev, Dev)
+    Dp = Dev + (-Dev) % block_dev
+    n = Dp // block_dev
+    TW = T * W
+    win = lambda name: BlockDecl(
+        name, (B, Dp, TW), (1, block_dev, TW), lambda b, i: (b, i, 0)
+    )
+    par = lambda name: BlockDecl(
+        name, (B, Dp), (1, block_dev), lambda b, i: (b, i)
+    )
+    return KernelGeometry(
+        kernel="window_query_batched", module=_MODULE,
+        case=f"B{B}Dev{Dev}T{T}W{W}bd{block_dev}",
+        grid=(B, n),
+        inputs=(par("q1"), par("deadline"), par("dur"),
+                win("t1"), win("t2"), win("valid")),
+        outputs=(par("start"), par("found")),
+    )
+
+
+@register("window_query")
+def geometries():
+    return [
+        # the paper testbed (4 devices) and a padded multi-block case
+        _unbatched(4, 2, 16, 256),
+        _unbatched(6, 2, 16, 4),        # pad 6 -> 8, two device blocks
+        _batched(8, 4, 2, 16, 256),
+        _batched(3, 6, 2, 16, 4),       # padded fleet tile
+    ]

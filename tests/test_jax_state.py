@@ -10,6 +10,7 @@ from repro.core.jax_state import (
     CFG_INDEX,
     export_state,
     hp_place,
+    hp_place_jit,
     lp_place,
 )
 from repro.core.scheduler import RASScheduler
@@ -110,7 +111,7 @@ def test_hp_place_is_jitted_once():
     """hp_place must not retrace per call (fixed shapes)."""
     s = _loaded()
     st = export_state(s)
-    f = hp_place.lower(st, jnp.asarray(0), jnp.asarray(1.0)).compile()
+    f = hp_place_jit.lower(st, jnp.asarray(0), jnp.asarray(1.0)).compile()
     for dev in range(4):
         found, start, st = f(st, jnp.asarray(dev), jnp.asarray(1.0))
     assert st.win_t1.shape == export_state(_loaded()).win_t1.shape

@@ -1,0 +1,151 @@
+"""Checkify sanitizer tests (REPRO_SANITIZE=1, repro.analysis.sanitize):
+
+- the sanitized placement/fleet paths are bit-identical to the default
+  build (the checks are traced in, the arithmetic is untouched);
+- corrupted scheduler state trips a *readable* checkify error naming the
+  violated invariant ("window order ...") instead of silently running;
+- the B=1 fleet-vs-serial calibration equivalence still holds with every
+  invariant armed, so the whole §IV pipeline is invariant-clean
+  end-to-end.
+
+The sanitize switch is read per call, so monkeypatch.setenv is enough to
+flip modes inside one process.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.checkify import JaxRuntimeError
+
+from repro.analysis import sanitize
+from repro.calib import CalibConfig, check_report, load_baseline, run_calibration
+from repro.calib.harness import PAPER_TRACES
+from repro.core.jax_state import export_state, hp_place, lp_place
+from repro.core.scheduler import RASScheduler
+from repro.fleet import FleetParams, fleet_run, make_fleet, make_workload
+
+import os
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO_ROOT, "results", "calib", "baseline.json")
+
+B, F, DEV = 4, 6, 4
+PARAMS = FleetParams(n_devices=DEV, segment_frames=3)
+
+
+def _sched_state(seed=0):
+    return export_state(RASScheduler(4, 20e6, seed=seed))
+
+
+def _corrupt(st):
+    """Give one valid window t1 > t2 — the signature of a racy write."""
+    return st._replace(
+        win_t1=st.win_t1.at[(0,) * (st.win_t1.ndim - 1) + (0,)].set(9.0),
+        win_t2=st.win_t2.at[(0,) * (st.win_t2.ndim - 1) + (0,)].set(1.0),
+        win_valid=st.win_valid.at[(0,) * (st.win_valid.ndim - 1) + (0,)]
+        .set(True),
+    )
+
+
+def test_enabled_reads_env(monkeypatch):
+    monkeypatch.delenv(sanitize.ENV_VAR, raising=False)
+    assert not sanitize.enabled()
+    monkeypatch.setenv(sanitize.ENV_VAR, "0")
+    assert not sanitize.enabled()
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    assert sanitize.enabled()
+
+
+# ---------------------------------------------------------------------------
+# sanitized == unsanitized (bit-exact)
+# ---------------------------------------------------------------------------
+
+def test_hp_place_equivalent_under_sanitize(monkeypatch):
+    st = _sched_state()
+    monkeypatch.delenv(sanitize.ENV_VAR, raising=False)
+    f0, s0, n0 = hp_place(st, jnp.asarray(1), jnp.asarray(1.0))
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    f1, s1, n1 = hp_place(st, jnp.asarray(1), jnp.asarray(1.0))
+    assert bool(f0) == bool(f1) and float(s0) == float(s1)
+    for a, b in zip(n0, n1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lp_place_equivalent_under_sanitize(monkeypatch):
+    st = _sched_state(seed=2)
+    args = (st, jnp.asarray(0), jnp.asarray(2.0), jnp.asarray(60.0))
+    monkeypatch.delenv(sanitize.ENV_VAR, raising=False)
+    out0 = lp_place(*args, n_tasks=3)
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    out1 = lp_place(*args, n_tasks=3)
+    for a, b in zip(jax.tree_util.tree_leaves(out0),
+                    jax.tree_util.tree_leaves(out1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fleet_run_equivalent_under_sanitize(monkeypatch):
+    wl = make_workload("uniform", B, F, DEV, seed=0)
+    monkeypatch.delenv(sanitize.ENV_VAR, raising=False)
+    out0, stats0 = fleet_run(make_fleet(B, DEV), wl.values, wl.bw_scale,
+                             params=PARAMS)
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    out1, stats1 = fleet_run(make_fleet(B, DEV), wl.values, wl.bw_scale,
+                             params=PARAMS)
+    for a, b in zip(jax.tree_util.tree_leaves(stats0),
+                    jax.tree_util.tree_leaves(stats1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(out0.sched.win_t1),
+                                  np.asarray(out1.sched.win_t1))
+    np.testing.assert_array_equal(np.asarray(out0.sched.win_valid),
+                                  np.asarray(out1.sched.win_valid))
+
+
+# ---------------------------------------------------------------------------
+# corrupted state trips readably
+# ---------------------------------------------------------------------------
+
+def test_corrupted_window_order_trips_hp(monkeypatch):
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    bad = _corrupt(_sched_state())
+    with pytest.raises(JaxRuntimeError, match="window order"):
+        hp_place(bad, jnp.asarray(0), jnp.asarray(1.0))
+
+
+def test_corrupted_window_order_trips_lp(monkeypatch):
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    bad = _corrupt(_sched_state())
+    with pytest.raises(JaxRuntimeError, match="window order"):
+        lp_place(bad, jnp.asarray(0), jnp.asarray(2.0), jnp.asarray(60.0))
+
+
+def test_corrupted_window_order_trips_fleet(monkeypatch):
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    fleet = make_fleet(B, DEV)
+    fleet = fleet._replace(sched=_corrupt(fleet.sched))
+    wl = make_workload("uniform", B, F, DEV, seed=0)
+    with pytest.raises(JaxRuntimeError, match="window order"):
+        fleet_run(fleet, wl.values, wl.bw_scale, params=PARAMS)
+
+
+def test_clean_state_does_not_trip(monkeypatch):
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    found, start, _ = hp_place(_sched_state(), jnp.asarray(0),
+                               jnp.asarray(1.0))
+    assert bool(found)
+
+
+# ---------------------------------------------------------------------------
+# B=1 fleet-vs-serial equivalence with every invariant armed
+# ---------------------------------------------------------------------------
+
+def test_b1_calibration_holds_under_sanitize(monkeypatch):
+    """The committed fleet-vs-serial tolerance still gates when the whole
+    fleet scan runs checkified — and no invariant trips along the way."""
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    cfg = CalibConfig(scenarios=(PAPER_TRACES[0],),
+                      congestion_levels=(0.0,), n_seeds=1, n_frames=40)
+    report = run_calibration(cfg)
+    ok, failures = check_report(report, load_baseline(BASELINE))
+    assert ok, failures
