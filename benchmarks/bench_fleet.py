@@ -29,24 +29,32 @@ import jax
 
 from benchmarks.common import RESULTS_DIR, csv_row, emit
 from repro.fleet import FleetParams, fleet_run, make_fleet, make_workload
+from repro.obs.profile import PhaseTimer, span
 from repro.sim.engine import ExperimentConfig, run_experiment
+
+#: host-side phase breakdown artifact (see README "Observability").
+PROFILE_PATH = os.path.join("results", "obs", "profile_fleet.json")
 
 #: relative speedup loss at batch 256 that fails the ``--gate`` check.
 GATE_REGRESSION = 0.20
 
 
 def _time_fleet(batch: int, n_frames: int, params: FleetParams) -> dict:
-    wl = make_workload("uniform", batch, n_frames, params.n_devices, seed=0)
-    fleet = make_fleet(batch, params.n_devices)
+    with span(f"bench/workload_b{batch}"):
+        wl = make_workload("uniform", batch, n_frames, params.n_devices,
+                           seed=0)
+        fleet = make_fleet(batch, params.n_devices)
     t0 = time.perf_counter()
-    jax.block_until_ready(
-        fleet_run(fleet, wl.values, wl.bw_scale, params=params)
-    )
+    with span(f"bench/first_call_b{batch}"):
+        jax.block_until_ready(
+            fleet_run(fleet, wl.values, wl.bw_scale, params=params)
+        )
     first_s = time.perf_counter() - t0
     t0 = time.perf_counter()
-    jax.block_until_ready(
-        fleet_run(fleet, wl.values, wl.bw_scale, params=params)
-    )
+    with span(f"bench/steady_call_b{batch}"):
+        jax.block_until_ready(
+            fleet_run(fleet, wl.values, wl.bw_scale, params=params)
+        )
     run_s = time.perf_counter() - t0
     return {
         "batch": batch,
@@ -75,19 +83,29 @@ def run(*, quick: bool = False, n_frames: int = 40) -> dict:
     batch_sizes = (256,) if quick else (32, 128, 256)
     params = FleetParams()
 
-    serial_s = _time_serial(n_frames)
+    timer = PhaseTimer()
+    with timer, span("bench/serial_des"):
+        serial_s = _time_serial(n_frames)
     serial_rps = 1.0 / serial_s
     csv_row("fleet_serial_des", serial_s * 1e6, "1_replica_per_process")
 
     curve = []
-    for b in batch_sizes:
-        r = _time_fleet(b, n_frames, params)
-        r["speedup_vs_serial"] = round(r["replicas_per_s"] / serial_rps, 2)
-        curve.append(r)
-        csv_row(
-            f"fleet_batched_b{b}", r["run_s"] / b * 1e6,
-            f"{r['speedup_vs_serial']}x_serial_compile_{r['compile_s']}s",
-        )
+    with timer:
+        for b in batch_sizes:
+            r = _time_fleet(b, n_frames, params)
+            r["speedup_vs_serial"] = round(
+                r["replicas_per_s"] / serial_rps, 2
+            )
+            curve.append(r)
+            csv_row(
+                f"fleet_batched_b{b}", r["run_s"] / b * 1e6,
+                f"{r['speedup_vs_serial']}x_serial_compile_{r['compile_s']}s",
+            )
+    # per-phase host breakdown (includes fleet_run's internal
+    # fleet/segment spans) alongside the headline curve
+    timer.save(PROFILE_PATH, extra={
+        "n_frames": n_frames, "batch_sizes": list(batch_sizes),
+    })
 
     out = {
         "n_frames": n_frames,

@@ -1,0 +1,107 @@
+"""Observability smoke: record a small fleet run and a serial run through
+the ``python -m repro.obs`` CLI, export both to Chrome trace-event JSON,
+and validate the traces against the trace-event schema.
+
+This is the CI leg behind ``results/obs/`` — it exercises the full
+record → export → validate path (telemetry scan capture, event-log
+wiring, Perfetto exporter) rather than re-testing pieces the unit tests
+already cover.  The emitted artifacts are uploaded by the workflow so a
+reviewer can drop them straight into ui.perfetto.dev.
+
+    PYTHONPATH=src python -m benchmarks.bench_obs
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.common import csv_row, emit, timeit_us
+
+OBS_DIR = os.path.join("results", "obs")
+
+#: quick-trace shape: B=8 replicas keeps the trace small enough to open
+#: interactively while still exercising the cross-replica track layout.
+BATCH, FRAMES, SEED = 8, 24, 0
+
+
+def _record_and_export(cli_args_record: list[str], recording: str) -> dict:
+    from repro.obs import cli
+    from repro.obs.export import load_trace, validate_trace
+
+    rc_record = cli.main(cli_args_record)
+    trace = os.path.splitext(recording)[0] + ".trace.json"
+    rc_export = cli.main(["export", "--input", recording])
+    errors = validate_trace(load_trace(trace)) if rc_export == 0 else \
+        ["export failed"]
+    n_events = len(load_trace(trace).get("traceEvents", [])) \
+        if rc_export == 0 else 0
+    return {
+        "recording": recording,
+        "trace": trace,
+        "record_rc": rc_record,
+        "export_rc": rc_export,
+        "trace_events": n_events,
+        "validation_errors": errors,
+        "ok": rc_record == 0 and rc_export == 0 and not errors,
+    }
+
+
+def run(*, quick: bool = True) -> dict:
+    os.makedirs(OBS_DIR, exist_ok=True)
+
+    fleet_rec = os.path.join(
+        OBS_DIR, f"fleet_weighted2_b{BATCH}_f{FRAMES}_s{SEED}.npz"
+    )
+    fleet = _record_and_export(
+        ["record", "--engine", "fleet", "--scenario", "weighted2",
+         "--batch", str(BATCH), "--frames", str(FRAMES),
+         "--seed", str(SEED), "--congestion", "0.3", "--out", OBS_DIR],
+        fleet_rec,
+    )
+    # the recorded summary carries the checked conservation residual —
+    # surface it here so a broken identity fails the smoke leg too
+    summary = json.load(open(os.path.splitext(fleet_rec)[0]
+                             + "_summary.json"))
+    residual_max = summary["conservation_residual"]["max_abs"]
+    fleet["conservation_residual_max_abs"] = residual_max
+    fleet["ok"] = fleet["ok"] and residual_max == 0
+
+    serial_rec = os.path.join(
+        OBS_DIR, f"serial_weighted2_f{FRAMES}_s{SEED}.jsonl"
+    )
+    serial = _record_and_export(
+        ["record", "--engine", "serial", "--scenario", "weighted2",
+         "--frames", str(FRAMES), "--seed", str(SEED),
+         "--congestion", "0.3", "--out", OBS_DIR],
+        serial_rec,
+    )
+
+    from repro.obs.export import validate_trace
+    validate_us = timeit_us(
+        lambda: validate_trace(json.load(open(fleet["trace"]))), iters=20
+    )
+
+    out = {
+        "fleet": fleet,
+        "serial": serial,
+        "validate_us": round(validate_us, 1),
+        "ok": fleet["ok"] and serial["ok"],
+    }
+    emit("BENCH_obs", out)
+    csv_row("obs_trace_validate", validate_us,
+            f"fleet_{fleet['trace_events']}ev_serial_"
+            f"{serial['trace_events']}ev")
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    out = run()
+    print(json.dumps(out, indent=1))
+    print(f"# obs smoke {'OK' if out['ok'] else 'FAILED'}")
+    return 0 if out["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

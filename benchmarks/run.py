@@ -73,6 +73,11 @@ def _analysis(a):
     return bench_analysis.run()
 
 
+def _obs(a):
+    from benchmarks import bench_obs
+    return bench_obs.run(quick=a.quick)
+
+
 #: Execution order matters: paper figures first, then kernels/fleet/calib.
 REGISTRY: tuple[BenchSpec, ...] = (
     BenchSpec("completion", "Fig. 4 frame-completion vs trace family "
@@ -93,6 +98,8 @@ REGISTRY: tuple[BenchSpec, ...] = (
               _roofline),
     BenchSpec("analysis", "Pallas geometry checker + jaxlint gate "
               "(REPRO_ANALYSIS_FIXTURE seeds violations)", _analysis),
+    BenchSpec("obs", "record/export/validate observability smoke "
+              "(fleet telemetry + serial event log -> Perfetto)", _obs),
 )
 
 #: Benches whose result dict carries a ``paper_checks`` table.
@@ -152,6 +159,8 @@ def main() -> None:
         )
     if "analysis" in results:
         all_checks["analysis.clean"] = bool(results["analysis"]["ok"])
+    if "obs" in results:
+        all_checks["obs.trace_valid"] = bool(results["obs"]["ok"])
     n_ok = sum(all_checks.values())
     print(f"# paper-claim checks: {n_ok}/{len(all_checks)} passed "
           f"({time.time() - t0:.1f}s total)")

@@ -59,7 +59,7 @@ RULES = (
 #: rule → path prefixes (relative to the scan root) it applies to;
 #: absent = everywhere.
 RULE_PATHS = {
-    "promotion-hazard": ("core/", "fleet/", "kernels/", "calib/"),
+    "promotion-hazard": ("core/", "fleet/", "kernels/", "calib/", "obs/"),
 }
 
 #: jnp factory calls that default to a config-dependent dtype, and the

@@ -92,6 +92,8 @@ from repro.core.tasks import FRAME_PERIOD, MAX_IMAGE_BYTES
 from repro.fleet.metrics import FleetStats, init_stats
 from repro.fleet.state import FleetState
 from repro.kernels.placement.ops import fused_place_op
+from repro.obs import profile as _profile
+from repro.obs import telemetry as _telemetry
 
 HP_IDX, LP2_IDX, LP4_IDX = 0, 1, 2
 MAX_LP = 4   # trace alphabet spawns at most 4 DNN tasks per frame
@@ -119,6 +121,15 @@ class FleetParams:
     #: consumed, so compile time is keyed on the segment, not the trace
     #: (0 → one segment spanning the whole trace).
     segment_frames: int = 40
+    #: opt-in in-scan telemetry (obs/telemetry.py): the scan additionally
+    #: emits per-tick series (device occupancy, re-queue depth, bandwidth,
+    #: counter deltas) and ``fleet_run`` returns a third TelemetryRecord
+    #: value.  The capture is read-only: state/stats stay bit-identical
+    #: to a telemetry-off run (same discipline as REPRO_SANITIZE).
+    telemetry: bool = False
+    #: keep every k-th tick of the telemetry series (downsampling happens
+    #: inside the jitted segment, so host transfer is O(S/k)).
+    telemetry_every: int = 1
 
 
 def _hp_query(st: SchedState, dev: int, now, dur, hp_deadline: float):
@@ -202,6 +213,10 @@ def _segment_impl(carry, values, bw_scale, f0, n_frames, *,
 
     def frame_step(carry, xs):
         st0, link_free0, rq0, vc0, stats0 = carry
+        if p.telemetry:
+            # per-device decision counts for obs/: appended once per
+            # device below, stacked to [B, Dev] at capture time
+            pd_run, pd_fail, pd_preempt, pd_lp = [], [], [], []
         st, link_free, stats = st0, link_free0, stats0
         rq_dl, rq_src, rq_ok = rq0
         vc_s, vc_end, vc_dl, vc_src, vc_ok = vc0
@@ -377,6 +392,8 @@ def _segment_impl(carry, values, bw_scale, f0, n_frames, *,
             deadline = now + p.lp_deadline_factor * FRAME_PERIOD
             frame_ok = hp_ok
             src_d = jnp.full((B,), d, jnp.int32)
+            if p.telemetry:
+                lp_placed_d = jnp.zeros((B,), jnp.int32)
             for k in range(MAX_LP):
                 mask = hp_ok & (k < n_lp)
                 comm_end = jnp.maximum(link_free, release) + ttime
@@ -407,10 +424,17 @@ def _segment_impl(carry, values, bw_scale, f0, n_frames, *,
                     remainders_dropped=stats.remainders_dropped + nd,
                 )
                 frame_ok = frame_ok & (ok | (k >= n_lp))
+                if p.telemetry:
+                    lp_placed_d = lp_placed_d + ok.astype(jnp.int32)
             stats = stats._replace(
                 frames_completed=stats.frames_completed
                 + (has_frame & frame_ok)
             )
+            if p.telemetry:
+                pd_run.append(hp_ok)
+                pd_fail.append(hp_fail)
+                pd_preempt.append(preempt)
+                pd_lp.append(lp_placed_d)
         if sanitize:
             _sanitize.check_windows(
                 st.win_t1, st.win_t2, st.win_valid, "fleet tick"
@@ -433,12 +457,32 @@ def _segment_impl(carry, values, bw_scale, f0, n_frames, *,
         out = jax.tree_util.tree_map(
             lambda n, o: jnp.where(active, n, o), new, carry
         )
-        return out, None
+        if not p.telemetry:
+            return out, None
+        # read-only capture from the post-mask carry: the per-device
+        # decision counts are already zero on padded ticks (padded trace
+        # values are -1, so has_frame is False everywhere)
+        def stack_i32(xs_):
+            return jnp.stack(xs_, axis=1).astype(jnp.int32)
+
+        ys = _telemetry.capture_tick(
+            out[0], out[1], out[2][2], stats0, out[4], base, bws,
+            p.nominal_bw_bps, stack_i32(pd_run), stack_i32(pd_fail),
+            stack_i32(pd_preempt), jnp.stack(pd_lp, axis=1),
+        )
+        return out, ys
 
     S = values.shape[0]
     xs = (f0 + jnp.arange(S, dtype=jnp.int32),
           values.astype(jnp.int32), bw_scale.astype(jnp.float32))
-    return jax.lax.scan(frame_step, carry, xs)[0]
+    carry, ys = jax.lax.scan(frame_step, carry, xs)
+    if not p.telemetry:
+        return carry
+    if p.telemetry_every > 1:
+        # fleet_run sizes segments to a multiple of the stride, so row i
+        # of segment j sits at global tick j*S + i*telemetry_every
+        ys = jax.tree_util.tree_map(lambda a: a[::p.telemetry_every], ys)
+    return carry, ys
 
 
 @functools.partial(
@@ -463,11 +507,14 @@ def _run_segment_checked(params: FleetParams):
 
 
 def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
-              *, params: FleetParams) -> tuple[FleetState, FleetStats]:
+              *, params: FleetParams):
     """Advance a whole fleet over `values` ([F, B, Dev] workload) in
     jitted ``segment_frames``-tick scans.  `bw_scale` is [F, B].  Returns
-    the final state and the per-replica counters.  The input `fleet` is
-    left untouched (segments run on donated copies)."""
+    ``(state, stats)`` — or ``(state, stats, telemetry_record)`` when
+    ``params.telemetry`` is on (the extra return is in-scan time series,
+    see obs/telemetry.py; state and stats are bit-identical either way).
+    The input `fleet` is left untouched (segments run on donated copies).
+    """
     p = params
     B = fleet.sched.win_t1.shape[0]
     n_dev = p.n_devices
@@ -478,7 +525,12 @@ def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
         f"fleet re-queue buffer {fleet.rq_valid.shape} != (B={B}, "
         f"requeue_slots={R}); build the fleet with matching requeue_slots"
     )
+    assert p.telemetry_every >= 1, "telemetry_every must be >= 1"
     S = F if p.segment_frames <= 0 else min(p.segment_frames, F)
+    if p.telemetry and p.telemetry_every > 1:
+        # the segment length must be a multiple of the stride so strided
+        # telemetry rows align on one global tick grid across segments
+        S = max(p.telemetry_every, S - S % p.telemetry_every)
     n_seg = -(-F // S)
     pad = n_seg * S - F
     values = jnp.asarray(values, jnp.int32)
@@ -505,16 +557,25 @@ def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
     ))
     nf = jnp.asarray(F, jnp.int32)
     sanitized = _sanitize.enabled()
-    for i in range(n_seg):
-        seg_args = (
-            carry, values[i * S:(i + 1) * S], bw_scale[i * S:(i + 1) * S],
-            jnp.asarray(i * S, jnp.int32), nf,
-        )
-        if sanitized:
-            err, carry = _run_segment_checked(p)(*seg_args)
-            err.throw()
-        else:
-            carry = _run_segment(*seg_args, params=p)
+    telem_segs = []
+    with _profile.maybe_jax_trace():
+        for i in range(n_seg):
+            seg_args = (
+                carry, values[i * S:(i + 1) * S],
+                bw_scale[i * S:(i + 1) * S],
+                jnp.asarray(i * S, jnp.int32), nf,
+            )
+            with _profile.span("fleet/segment"):
+                if sanitized:
+                    err, res = _run_segment_checked(p)(*seg_args)
+                    err.throw()
+                else:
+                    res = _run_segment(*seg_args, params=p)
+            if p.telemetry:
+                carry, ys = res
+                telem_segs.append(ys)
+            else:
+                carry = res
     sched, link_free, rq, vc, stats = carry
     out = FleetState(
         sched=sched, link_free=link_free,
@@ -523,4 +584,11 @@ def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
         vc_start=vc[0], vc_end=vc[1], vc_deadline=vc[2], vc_src=vc[3],
         vc_valid=vc[4],
     )
-    return out, stats
+    if not p.telemetry:
+        return out, stats
+    with _profile.span("fleet/telemetry_host_transfer"):
+        record = _telemetry.assemble(
+            telem_segs, n_frames=F, every=p.telemetry_every,
+            nominal_bw_bps=p.nominal_bw_bps,
+        )
+    return out, stats, record

@@ -72,10 +72,27 @@ def _mean_ci(x: np.ndarray) -> dict:
     return {"mean": round(mean, 4), "ci95": round(ci, 4)}
 
 
-def per_replica_rates(stats: FleetStats) -> dict:
+def conservation_residual(stats: FleetStats, rq_pending) -> np.ndarray:
+    """Per-replica residual of the LP-task conservation identity above:
+    ``lp_spawned - (lp_completed + lp_failed + missed_by_preemption +
+    rq_pending)``.  Exactly zero on every trace unless the engine has
+    lost or double-counted a task; ``rq_pending`` is the end-of-run
+    re-queue buffer occupancy ``FleetState.rq_valid.sum(axis=1)``."""
+    s = {k: np.asarray(v, np.int64) for k, v in stats._asdict().items()
+         if k in ("lp_spawned", "lp_completed", "lp_failed",
+                  "missed_by_preemption")}
+    pending = np.asarray(rq_pending, np.int64)
+    return s["lp_spawned"] - (s["lp_completed"] + s["lp_failed"]
+                              + s["missed_by_preemption"] + pending)
+
+
+def per_replica_rates(stats: FleetStats, rq_pending=None) -> dict:
     """Per-replica `[B]` rate arrays — the single place the counter
     algebra lives (summarize and the calibration harness both consume
-    it, so the two can never drift apart)."""
+    it, so the two can never drift apart).  Pass the end-of-run re-queue
+    occupancy (``FleetState.rq_valid.sum(axis=1)``) as ``rq_pending`` to
+    additionally report the one conservation term the counters alone
+    cannot see."""
     s = {k: np.asarray(v, np.float64) for k, v in stats._asdict().items()}
     frames = np.maximum(s["frames"], 1)
     lp = np.maximum(s["lp_spawned"], 1)
@@ -89,7 +106,7 @@ def per_replica_rates(stats: FleetStats) -> dict:
     initial = np.maximum(
         s["lp_completed"] + s["hp_preempted"] - s["lp_requeued"], 1
     )
-    return {
+    out = {
         "frame_completion_rate": s["frames_completed"] / frames,
         "hp_completion_rate": s["hp_completed"] / frames,
         "hp_preemption_rate": s["hp_preempted"] / frames,
@@ -103,16 +120,33 @@ def per_replica_rates(stats: FleetStats) -> dict:
         "mean_start_delay_s": s["start_delay_sum"] / initial,
         "remainder_drop_rate": s["remainders_dropped"] / frames,
     }
+    if rq_pending is not None:
+        # end-of-run re-queue buffer depth: the only term of the
+        # conservation identity the counters alone do not report
+        out["rq_pending_depth"] = np.asarray(rq_pending, np.float64)
+    return out
 
 
-def summarize(stats: FleetStats, n_frames: int) -> dict:
-    """Reduce per-replica counters to mean ± 95% CI across the batch."""
+def summarize(stats: FleetStats, n_frames: int, *, rq_pending=None) -> dict:
+    """Reduce per-replica counters to mean ± 95% CI across the batch.
+
+    With ``rq_pending`` (end-of-run ``FleetState.rq_valid.sum(axis=1)``)
+    the summary additionally reports ``rq_pending_depth`` and the checked
+    ``conservation_residual`` of the LP-task identity — any non-zero
+    ``max_abs`` means the engine lost or double-counted a task."""
     s = {k: np.asarray(v) for k, v in stats._asdict().items()}
     sim_time = n_frames * FRAME_PERIOD
     out = {"replicas": int(s["frames"].size)}
     out.update(
-        (k, _mean_ci(v)) for k, v in per_replica_rates(stats).items()
+        (k, _mean_ci(v))
+        for k, v in per_replica_rates(stats, rq_pending=rq_pending).items()
     )
     out["link_utilisation"] = _mean_ci(s["comm_busy"] / sim_time)
     out["lp_throughput_per_s"] = _mean_ci(s["lp_completed"] / sim_time)
+    if rq_pending is not None:
+        residual = conservation_residual(stats, rq_pending)
+        out["conservation_residual"] = {
+            **_mean_ci(residual),
+            "max_abs": int(np.abs(residual).max()) if residual.size else 0,
+        }
     return out

@@ -72,19 +72,26 @@ def run_sweep(cfg: SweepConfig) -> dict:
         values = np.concatenate([values, values[:, :pad]], axis=1)
         bw_scale = np.concatenate([bw_scale, bw_scale[:, :pad]], axis=1)
     per_replica: list[FleetStats] = []
+    per_replica_pending: list[np.ndarray] = []
     for b0 in range(0, values.shape[1], bs):
         fleet = make_fleet(bs, cfg.n_devices, requeue_slots=p.requeue_slots)
-        _, stats = fleet_run(
+        state, stats = fleet_run(
             fleet,
             values[:, b0:b0 + bs],
             bw_scale[:, b0:b0 + bs],
             params=p,
         )
         per_replica.append(jax_to_np(stats))
+        # end-of-run re-queue occupancy: closes the LP conservation
+        # identity that summarize() checks per cell
+        per_replica_pending.append(
+            np.asarray(state.rq_valid).sum(axis=1).astype(np.int64)
+        )
     merged = FleetStats(*(
         np.concatenate([getattr(s, f) for s in per_replica])[:total]
         for f in FleetStats._fields
     ))
+    pending = np.concatenate(per_replica_pending)[:total]
 
     out = {
         "_sweep": {
@@ -100,7 +107,9 @@ def run_sweep(cfg: SweepConfig) -> dict:
         cell_stats = FleetStats(
             *(getattr(merged, f)[sel] for f in FleetStats._fields)
         )
-        out[f"{scen}@{cong:g}"] = summarize(cell_stats, cfg.n_frames)
+        out[f"{scen}@{cong:g}"] = summarize(
+            cell_stats, cfg.n_frames, rq_pending=pending[sel]
+        )
     return out
 
 

@@ -1,0 +1,112 @@
+"""Host-side phase profiling: a lightweight span timer plus an optional
+``jax.profiler.trace`` hook.
+
+Two cooperating layers:
+
+- **Span timer** — ``with PhaseTimer() as t:`` activates collection;
+  instrumented code (``fleet_run`` segments, benchmark drivers) wraps its
+  phases in ``with span("name"):``.  When no timer is active a span is a
+  no-op (one list check), so the engine can stay instrumented
+  unconditionally.  ``t.summary()`` reduces to per-phase count / total /
+  mean / max, and ``t.save(path)`` persists the summary as a
+  ``results/obs/`` artifact.
+- **Device profiler hook** — ``maybe_jax_trace()`` wraps a block in
+  ``jax.profiler.trace(REPRO_PROFILE_DIR)`` when that environment
+  variable is set (the emitted trace opens in TensorBoard's profiler or
+  ui.perfetto.dev), and is a no-op otherwise.  Nested invocations are
+  guarded: only the outermost block traces.
+
+Timers nest: every active timer records every span, so a benchmark-level
+timer sees the engine's internal phases too.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import time
+from typing import Iterator
+
+ENV_VAR = "REPRO_PROFILE_DIR"
+
+#: currently-active timers (appended by ``PhaseTimer.__enter__``).
+_ACTIVE: list["PhaseTimer"] = []
+
+_TRACING = False
+
+
+class PhaseTimer:
+    """Collects wall-clock span durations while active (context manager)."""
+
+    def __init__(self) -> None:
+        self.spans: dict[str, list[float]] = {}
+
+    def add(self, name: str, seconds: float) -> None:
+        self.spans.setdefault(name, []).append(seconds)
+
+    def __enter__(self) -> "PhaseTimer":
+        _ACTIVE.append(self)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        _ACTIVE.remove(self)
+
+    def summary(self) -> dict:
+        out = {}
+        for name, xs in sorted(self.spans.items()):
+            total = sum(xs)
+            out[name] = {
+                "count": len(xs),
+                "total_s": round(total, 6),
+                "mean_ms": round(total / len(xs) * 1e3, 3),
+                "max_ms": round(max(xs) * 1e3, 3),
+            }
+        return out
+
+    def save(self, path: str, extra: dict | None = None) -> dict:
+        """Write ``{phases: summary, **extra}`` as JSON; returns the dict."""
+        payload = {"phases": self.summary()}
+        if extra:
+            payload.update(extra)
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+        return payload
+
+
+@contextlib.contextmanager
+def span(name: str) -> Iterator[None]:
+    """Record a wall-clock span into every active PhaseTimer (no-op when
+    none is active)."""
+    if not _ACTIVE:
+        yield
+        return
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        dt = time.perf_counter() - t0
+        for timer in _ACTIVE:
+            timer.add(name, dt)
+
+
+@contextlib.contextmanager
+def maybe_jax_trace() -> Iterator[None]:
+    """Wrap a block in ``jax.profiler.trace($REPRO_PROFILE_DIR)`` when the
+    variable is set; plain passthrough (and re-entrant safe) otherwise."""
+    global _TRACING
+    trace_dir = os.environ.get(ENV_VAR, "")
+    if not trace_dir or _TRACING:
+        yield
+        return
+    import jax
+
+    _TRACING = True
+    try:
+        with jax.profiler.trace(trace_dir):
+            yield
+    finally:
+        _TRACING = False

@@ -43,6 +43,7 @@ from repro.core.tasks import (
     PROBE_PING_COUNT,
 )
 from repro.core.wps import WPSScheduler
+from repro.obs.events import EventLog
 from repro.sim.congestion import CongestionModel, LinkActivity
 from repro.sim.metrics import Metrics
 from repro.sim.traces import Trace, generate_trace
@@ -133,8 +134,11 @@ class DeviceExec:
 
 
 class Simulation:
-    def __init__(self, cfg: ExperimentConfig, trace: Optional[Trace] = None):
+    def __init__(self, cfg: ExperimentConfig, trace: Optional[Trace] = None,
+                 event_log: Optional[EventLog] = None):
         self.cfg = cfg
+        #: opt-in structured event log (obs/events.py); None = zero cost
+        self.obs = event_log
         reset_task_ids()
         self.trace = trace or generate_trace(
             cfg.trace, cfg.n_frames, cfg.n_devices, seed=cfg.seed
@@ -226,6 +230,9 @@ class Simulation:
             frame_id=frame.frame_id,
         )
         frame.hp_task = hp
+        if self.obs:
+            self.obs.emit(t, "frame_release", device=d,
+                          frame_id=frame.frame_id, info={"value": v})
         self._push(t, "sched_hp", (hp, frame, v))
 
     def _on_sched_hp(self, t: float, payload) -> None:
@@ -243,6 +250,15 @@ class Simulation:
                 victim.realloc_count += 1
                 bump = getattr(victim, "epoch", 0) + 1
                 victim.epoch = bump
+                if self.obs:
+                    self.obs.emit(
+                        commit, "preempt", priority="LP",
+                        device=victim.device if victim.device is not None
+                        else -1,
+                        task_id=victim.task_id, frame_id=victim.frame_id,
+                        info={"deadline": round(victim.deadline, 6),
+                              "by_task": hp.task_id},
+                    )
                 # Execution truth: the victim's cores free at preemption time.
                 if victim.device is not None:
                     self.exec_devices[victim.device].release(victim.task_id, commit)
@@ -251,6 +267,10 @@ class Simulation:
                 self._push(commit, "sched_lp", (req, None, True))
         if not res.success:
             self.metrics.hp_failed += 1
+            if self.obs:
+                self.obs.emit(te, "hp_admit_fail", priority="HP",
+                              device=hp.source_device, task_id=hp.task_id,
+                              frame_id=frame.frame_id)
             return
         if res.preempted:
             self.metrics.hp_alloc_with_preempt += 1
@@ -262,6 +282,15 @@ class Simulation:
         actual_start = dev.earliest_start(max(hp.start_time, commit), dur, hp.config.cores)
         actual_end = actual_start + dur
         dev.occupy(actual_start, actual_end, hp.config.cores, hp.task_id)
+        if self.obs:
+            self.obs.emit(te, "hp_place", priority="HP", device=hp.device,
+                          task_id=hp.task_id, frame_id=frame.frame_id,
+                          info={"latency": round(res.latency, 6),
+                                "preempted": len(res.preempted or ())})
+            self.obs.emit(actual_start, "exec", priority="HP",
+                          device=hp.device, task_id=hp.task_id,
+                          frame_id=frame.frame_id, dur=dur,
+                          info={"cores": hp.config.cores})
         self._push(actual_end, "hp_done", (hp, frame, v, actual_end))
 
     def _on_hp_done(self, t: float, payload) -> None:
@@ -270,9 +299,17 @@ class Simulation:
         if actual_end <= hp.deadline:
             hp.state = TaskState.COMPLETED
             self.metrics.hp_completed += 1
+            if self.obs:
+                self.obs.emit(t, "hp_done", priority="HP", device=hp.device,
+                              task_id=hp.task_id, frame_id=frame.frame_id)
         else:
             hp.state = TaskState.VIOLATED
             self.metrics.hp_violated += 1
+            if self.obs:
+                self.obs.emit(t, "deadline_miss", priority="HP",
+                              device=hp.device, task_id=hp.task_id,
+                              frame_id=frame.frame_id,
+                              info={"late_by": round(t - hp.deadline, 6)})
             return  # frame already dead; don't spawn LP work
         if v >= 1:
             deadline = frame.release_time + self.cfg.lp_deadline_factor * FRAME_PERIOD
@@ -303,6 +340,12 @@ class Simulation:
             for task in req.tasks:
                 task.state = TaskState.FAILED
                 self.metrics.lp_failed += 1
+                if self.obs:
+                    self.obs.emit(te, "lp_fail", priority="LP",
+                                  device=task.source_device,
+                                  task_id=task.task_id,
+                                  frame_id=task.frame_id,
+                                  info={"realloc": bool(is_realloc)})
             return
         if is_realloc:
             self.metrics.lp_realloc_success += len(req.tasks)
@@ -324,6 +367,13 @@ class Simulation:
                 )
                 self.link_activity.add(comm_start, comm_end)
                 ready = comm_end
+                if self.obs:
+                    self.obs.emit(comm_start, "offload", priority="LP",
+                                  device=task.device, task_id=task.task_id,
+                                  frame_id=task.frame_id,
+                                  dur=comm_end - comm_start,
+                                  info={"src": task.source_device,
+                                        "bytes": task.transfer_bytes})
             dur = task.config.padded_time * self._jitter()
             dev = self.exec_devices[task.device]
             actual_start = dev.earliest_start(
@@ -332,6 +382,19 @@ class Simulation:
             actual_end = actual_start + dur
             dev.occupy(actual_start, actual_end, task.config.cores, task.task_id)
             epoch = getattr(task, "epoch", 0)
+            if self.obs:
+                self.obs.emit(
+                    te, "requeue_place" if is_realloc else "lp_place",
+                    priority="LP", device=task.device,
+                    task_id=task.task_id, frame_id=task.frame_id,
+                    info={"cores": task.config.cores,
+                          "offloaded": bool(task.offloaded),
+                          "src": task.source_device},
+                )
+                self.obs.emit(actual_start, "exec", priority="LP",
+                              device=task.device, task_id=task.task_id,
+                              frame_id=task.frame_id, dur=dur,
+                              info={"cores": task.config.cores})
             self._push(actual_end, "task_done", (task, epoch, actual_end))
 
     def _on_task_done(self, t: float, payload) -> None:
@@ -354,9 +417,18 @@ class Simulation:
                 self.metrics.lp_completed_no_realloc += 1
             if task.offloaded:
                 self.metrics.lp_offloaded_completed += 1
+            if self.obs:
+                self.obs.emit(t, "lp_done", priority="LP",
+                              device=task.device, task_id=task.task_id,
+                              frame_id=task.frame_id)
         else:
             task.state = TaskState.VIOLATED
             self.metrics.lp_violated += 1
+            if self.obs:
+                self.obs.emit(t, "deadline_miss", priority="LP",
+                              device=task.device, task_id=task.task_id,
+                              frame_id=task.frame_id,
+                              info={"late_by": round(t - task.deadline, 6)})
 
     def _on_probe(self, t: float, payload) -> None:
         """Bandwidth estimation round (§V): collided pings read the residual
@@ -387,6 +459,13 @@ class Simulation:
         prev_est = self.sched.bw.estimate_bps
         self.sched.bandwidth_update(samples, t)
         self.metrics.bw_updates += 1
+        if self.obs:
+            self.obs.emit(
+                t, "bw_update",
+                info={"estimate_bps": float(self.sched.bw.estimate_bps),
+                      "true_bps": float(true_bw),
+                      "busy_fraction": round(busy, 4)},
+            )
         if cfg.bw_adaptive:
             # §VII future work: volatile estimates -> probe sooner; stable
             # estimates -> back off (probing itself congests, §VI.B).
@@ -430,5 +509,6 @@ class Simulation:
                 dev.prune(t)
 
 
-def run_experiment(cfg: ExperimentConfig) -> Metrics:
-    return Simulation(cfg).run()
+def run_experiment(cfg: ExperimentConfig,
+                   event_log: Optional[EventLog] = None) -> Metrics:
+    return Simulation(cfg, event_log=event_log).run()

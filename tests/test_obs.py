@@ -1,0 +1,318 @@
+"""Observability layer tests (src/repro/obs/):
+
+- telemetry-off runs are **bit-identical** to telemetry-on runs — in
+  FleetState and FleetStats — including under ``segment_frames``
+  segmenting and with the checkify sanitizers armed (REPRO_SANITIZE=1);
+- in-scan series reconcile exactly against the engine's final counters,
+  and strided capture samples the same tick grid as full capture;
+- the LP-task conservation identity holds (residual exactly zero) on
+  every paper trace family, surfaced via ``summarize``;
+- exporters emit Chrome trace-event JSON that passes schema validation,
+  for both the fleet telemetry recording and the serial event log;
+- EventLog / CLI round-trips and the host-side phase timer.
+
+Fleet runs share one (B, F, Dev) signature to bound XLA compiles.
+"""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.analysis import sanitize
+from repro.fleet import (
+    FleetParams,
+    fleet_run,
+    make_fleet,
+    make_workload,
+    scenario_names,
+    summarize,
+)
+from repro.fleet.metrics import conservation_residual, per_replica_rates
+from repro.obs import profile
+from repro.obs.events import Event, EventLog
+from repro.obs.export import (
+    fleet_trace_events,
+    load_trace,
+    sim_trace_events,
+    validate_trace,
+    write_chrome_trace,
+)
+from repro.obs.telemetry import load_record
+from repro.sim.engine import ExperimentConfig, run_experiment
+
+B, F, DEV = 8, 8, 4
+PARAMS = FleetParams(n_devices=DEV)
+TPARAMS = dataclasses.replace(PARAMS, telemetry=True)
+
+
+def _wl(scenario="weighted2", congestion=0.3, seed=0):
+    return make_workload(scenario, B, F, DEV, seed=seed,
+                         congestion=congestion)
+
+
+def _run(params, wl=None):
+    wl = wl or _wl()
+    return fleet_run(make_fleet(B, DEV), wl.values, wl.bw_scale,
+                     params=params)
+
+
+def _tree_bytes(tree):
+    return tuple(
+        np.asarray(x).tobytes() for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def _pending(state):
+    return np.asarray(state.rq_valid).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: telemetry capture must not perturb the simulation
+# ---------------------------------------------------------------------------
+
+def test_telemetry_off_bit_identical():
+    state0, stats0 = _run(PARAMS)
+    state1, stats1, rec = _run(TPARAMS)
+    assert _tree_bytes(state0) == _tree_bytes(state1)
+    assert _tree_bytes(stats0) == _tree_bytes(stats1)
+    assert rec.ticks.size == F and rec.n_replicas == B
+
+
+def test_telemetry_bit_identical_under_segmenting():
+    seg_off = dataclasses.replace(PARAMS, segment_frames=3)
+    seg_on = dataclasses.replace(TPARAMS, segment_frames=3)
+    state0, stats0 = _run(seg_off)
+    state1, stats1, rec = _run(seg_on)
+    assert _tree_bytes(state0) == _tree_bytes(state1)
+    assert _tree_bytes(stats0) == _tree_bytes(stats1)
+    # padded segment-tail ticks must be trimmed, not recorded
+    assert rec.ticks.size == F
+    # and the segmented run matches the unsegmented one
+    state2, stats2 = _run(PARAMS)
+    assert _tree_bytes(state0) == _tree_bytes(state2)
+    assert _tree_bytes(stats0) == _tree_bytes(stats2)
+
+
+def test_telemetry_bit_identical_under_sanitize(monkeypatch):
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    state0, stats0 = _run(PARAMS)
+    state1, stats1, _ = _run(TPARAMS)
+    assert _tree_bytes(state0) == _tree_bytes(state1)
+    assert _tree_bytes(stats0) == _tree_bytes(stats1)
+
+
+# ---------------------------------------------------------------------------
+# series content: per-tick deltas reconcile with the final counters
+# ---------------------------------------------------------------------------
+
+def test_delta_series_reconcile_with_final_counters():
+    _, stats, rec = _run(TPARAMS)
+    s = rec.series
+    for series, field in (
+        (s.hp_completed_d, "hp_completed"),
+        (s.hp_failed_d, "hp_failed"),
+        (s.hp_preempted_d, "hp_preempted"),
+        (s.lp_spawned_d, "lp_spawned"),
+        (s.lp_completed_d, "lp_completed"),
+        (s.lp_failed_d, "lp_failed"),
+        (s.lp_requeued_d, "lp_requeued"),
+        (s.missed_by_preemption_d, "missed_by_preemption"),
+    ):
+        np.testing.assert_array_equal(
+            series.sum(axis=0), np.asarray(getattr(stats, field)),
+            err_msg=field,
+        )
+    # per-device series reduce to the same per-replica counters
+    np.testing.assert_array_equal(
+        s.preempt_dev.sum(axis=(0, 2)), np.asarray(stats.hp_preempted)
+    )
+    np.testing.assert_array_equal(
+        s.hp_fail_dev.sum(axis=(0, 2)), np.asarray(stats.hp_failed)
+    )
+    assert s.rq_depth.min() >= 0 and s.bandwidth_bps.min() > 0
+
+
+def test_strided_capture_samples_the_full_grid():
+    every = 3
+    _, stats_full, full = _run(TPARAMS)
+    p = dataclasses.replace(TPARAMS, telemetry_every=every,
+                            segment_frames=5)
+    _, stats_strided, strided = _run(p)
+    # striding must not perturb the simulation either
+    assert _tree_bytes(stats_full) == _tree_bytes(stats_strided)
+    np.testing.assert_array_equal(strided.ticks,
+                                  np.arange(0, F, every, dtype=np.int64))
+    # strided rows are exact samples of the full-capture series
+    for name in full.series._fields:
+        np.testing.assert_array_equal(
+            getattr(strided.series, name),
+            getattr(full.series, name)[strided.ticks],
+            err_msg=name,
+        )
+
+
+def test_record_save_load_roundtrip(tmp_path):
+    _, _, rec = _run(TPARAMS)
+    path = str(tmp_path / "rec.npz")
+    rec.save(path)
+    back = load_record(path)
+    assert back.every == rec.every and back.n_frames == rec.n_frames
+    assert back.nominal_bw_bps == rec.nominal_bw_bps
+    for name in rec.series._fields:
+        np.testing.assert_array_equal(getattr(back.series, name),
+                                      getattr(rec.series, name))
+
+
+# ---------------------------------------------------------------------------
+# conservation identity (satellite 1 + 2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", scenario_names())
+def test_conservation_residual_zero_on_paper_traces(scenario):
+    for congestion in (0.0, 0.3):
+        state, stats = _run(PARAMS, _wl(scenario, congestion))
+        residual = conservation_residual(stats, _pending(state))
+        np.testing.assert_array_equal(
+            residual, 0, err_msg=f"{scenario}@{congestion}"
+        )
+
+
+def test_summarize_reports_rq_depth_and_residual():
+    state, stats = _run(PARAMS)
+    pending = _pending(state)
+    rates = per_replica_rates(stats, rq_pending=pending)
+    np.testing.assert_array_equal(rates["rq_pending_depth"], pending)
+    out = summarize(stats, F, rq_pending=pending)
+    assert out["conservation_residual"]["max_abs"] == 0
+    assert "rq_pending_depth" in out
+    # without rq_pending the summary is unchanged from the legacy shape
+    legacy = summarize(stats, F)
+    assert "conservation_residual" not in legacy
+    assert "rq_pending_depth" not in legacy
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def test_fleet_trace_export_valid(tmp_path):
+    _, _, rec = _run(TPARAMS)
+    events = fleet_trace_events(rec, replicas=[0, 1])
+    path = str(tmp_path / "fleet.trace.json")
+    write_chrome_trace(path, events)
+    obj = load_trace(path)
+    assert validate_trace(obj) == []
+    names = {e["name"] for e in obj["traceEvents"]}
+    # counter tracks for re-queue depth and bandwidth (per ISSUE)
+    assert "rq_depth" in names and "bandwidth_mbps" in names
+    # one thread-name metadata row per device per exported replica
+    meta = [e for e in obj["traceEvents"]
+            if e["ph"] == "M" and e["name"] == "thread_name"]
+    assert len({(e["pid"], e["tid"]) for e in meta}) >= 2 * DEV
+
+
+def test_sim_trace_export_valid(tmp_path):
+    log = EventLog()
+    run_experiment(
+        ExperimentConfig(trace="weighted2", n_frames=F, seed=0,
+                         duty_cycle=0.3),
+        event_log=log,
+    )
+    assert len(log) > 0
+    events = sim_trace_events(log)
+    path = str(tmp_path / "sim.trace.json")
+    write_chrome_trace(path, events)
+    obj = load_trace(path)
+    assert validate_trace(obj) == []
+    spans = [e for e in obj["traceEvents"] if e["ph"] == "X"]
+    assert spans and all(e["dur"] >= 0 for e in spans)
+
+
+def test_validate_trace_rejects_malformed():
+    assert validate_trace({"traceEvents": "nope"})
+    assert validate_trace({"traceEvents": [{"ph": "Z", "name": "x",
+                                            "pid": 0, "tid": 0, "ts": 0}]})
+    assert validate_trace({"traceEvents": [
+        {"ph": "X", "name": "x", "pid": 0, "tid": 0, "ts": 0, "dur": -1}
+    ]})
+
+
+# ---------------------------------------------------------------------------
+# serial event log
+# ---------------------------------------------------------------------------
+
+def test_eventlog_roundtrip_and_guards(tmp_path):
+    log = EventLog()
+    assert log and len(log) == 0  # empty log stays truthy (engine guards)
+    with pytest.raises(ValueError):
+        log.emit(0.0, "not_a_kind")
+    log.emit(1.5, "exec", device=2, task_id=7, priority="LP", dur=0.25,
+             info={"cores": 4})
+    path = str(tmp_path / "log.jsonl")
+    log.to_jsonl(path)
+    back = EventLog.from_jsonl(path)
+    assert list(back) == [Event(t=1.5, kind="exec", device=2, task_id=7,
+                                priority="LP", dur=0.25,
+                                info={"cores": 4})]
+
+
+def test_serial_metrics_unchanged_with_event_log():
+    cfg = ExperimentConfig(trace="weighted2", n_frames=F, seed=3,
+                           duty_cycle=0.3)
+    plain = run_experiment(cfg).summary()
+    logged = run_experiment(cfg, event_log=EventLog()).summary()
+    assert plain == logged
+
+
+def test_cli_serial_record_export_summary(tmp_path, capsys):
+    from repro.obs import cli
+
+    out = str(tmp_path)
+    assert cli.main(["record", "--engine", "serial", "--scenario",
+                     "weighted2", "--frames", str(F), "--out", out]) == 0
+    rec = os.path.join(out, f"serial_weighted2_f{F}_s0.jsonl")
+    assert os.path.exists(rec)
+    summary = json.load(open(os.path.join(
+        out, f"serial_weighted2_f{F}_s0_summary.json")))
+    assert summary
+    assert cli.main(["export", "--input", rec]) == 0
+    trace = os.path.splitext(rec)[0] + ".trace.json"
+    assert validate_trace(load_trace(trace)) == []
+    assert cli.main(["summary", "--input", rec]) == 0
+    assert cli.main(["summary", "--input", trace]) == 0
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# host-side phase profiling
+# ---------------------------------------------------------------------------
+
+def test_phase_timer_spans_and_save(tmp_path):
+    with profile.span("obs/inactive"):
+        pass  # no active timer: must be a silent no-op
+    t = profile.PhaseTimer()
+    with t:
+        with profile.span("obs/a"):
+            pass
+        with profile.span("obs/a"):
+            with profile.span("obs/b"):
+                pass
+    with profile.span("obs/after"):
+        pass  # timer exited: not recorded
+    s = t.summary()
+    assert s["obs/a"]["count"] == 2 and s["obs/b"]["count"] == 1
+    assert "obs/after" not in s and "obs/inactive" not in s
+    path = str(tmp_path / "profile.json")
+    payload = t.save(path, extra={"note": 1})
+    assert json.load(open(path)) == payload and payload["note"] == 1
+
+
+def test_fleet_run_records_segment_spans():
+    with profile.PhaseTimer() as t:
+        _run(PARAMS)
+    assert t.summary()["fleet/segment"]["count"] >= 1
