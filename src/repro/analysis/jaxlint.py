@@ -35,6 +35,18 @@ Rules
     checker's registry (``analysis/pallas_check.py``) — its grid/BlockSpec
     layout is unproven.
 
+``host-transfer``
+    Device→host traffic in the fleet hot path (``fleet/``): any
+    ``jax.device_get``; ``np.*`` / ``.item()`` / ``.tolist()`` calls
+    inside a ``lax.scan``-bearing function (each one synchronously pulls
+    sharded buffers off the mesh mid-loop); and ``jit(...)``
+    call-expressions built without ``donate_argnums`` (the segment carry
+    then round-trips through fresh buffers every dispatch instead of
+    updating in place — the O(B·state) copy the sharded engine exists to
+    avoid).  Suppress with ``# repro: lint-ok(host-transfer)`` where the
+    transfer is the *intended* O(metrics) reduction or the checked path
+    must keep its inputs alive.
+
 Suppressions: an inline ``# repro: lint-ok(<rule>[, <rule>...])`` comment
 on the flagged line (or the line above it) silences that finding;
 ``analysis/lint_allow.txt`` holds ``<relpath>:<rule>`` lines for
@@ -54,12 +66,14 @@ RULES = (
     "promotion-hazard",
     "scan-donate",
     "unregistered-pallas-call",
+    "host-transfer",
 )
 
 #: rule → path prefixes (relative to the scan root) it applies to;
 #: absent = everywhere.
 RULE_PATHS = {
     "promotion-hazard": ("core/", "fleet/", "kernels/", "calib/", "obs/"),
+    "host-transfer": ("fleet/",),
 }
 
 #: jnp factory calls that default to a config-dependent dtype, and the
@@ -340,6 +354,54 @@ def _lint_tree(tree: ast.Module, relpath: str,
                     f"int64/float64 under JAX_ENABLE_X64 (int64 iotas do "
                     f"not lower on TPU) — pass dtype= explicitly",
                 ))
+
+    # host-transfer (fleet hot path, path-scoped).  Walks every function
+    # (nested scan bodies are reached through their scan-bearing parent);
+    # `seen` dedupes the parent/nested double-visit.
+    if _rule_applies("host-transfer", relpath):
+        seen: set[tuple[int, str]] = set()
+
+        def _ht(line: int, msg: str):
+            if (line, msg) not in seen:
+                seen.add((line, msg))
+                findings.append(
+                    Finding(relpath, line, "host-transfer", msg)
+                )
+
+        for fn in ast.walk(tree):
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            in_hot = _contains_scan(fn) is not None
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee = _dotted(node.func)
+                if callee.endswith("device_get"):
+                    _ht(node.lineno,
+                        "device_get pulls fleet state to the host — keep "
+                        "the reduction on device (psum/pmax inside the "
+                        "sharded region) and transfer O(metrics) only")
+                elif in_hot and (
+                    callee.split(".")[0] == "np"
+                    or (isinstance(node.func, ast.Attribute)
+                        and node.func.attr in ("item", "tolist"))
+                ):
+                    what = callee or f".{node.func.attr}"
+                    _ht(node.lineno,
+                        f"`{what}` inside scan-bearing `{fn.name}` "
+                        f"forces an implicit device→host transfer per "
+                        f"call — hoist it out of the hot loop or reduce "
+                        f"on device")
+                elif (callee.endswith("jit")
+                      and isinstance(node.func, (ast.Attribute, ast.Name))
+                      and not any(k.arg == "donate_argnums"
+                                  for k in node.keywords)):
+                    _ht(node.lineno,
+                        "jit(...) without donate_argnums in the fleet "
+                        "hot path — the segment carry round-trips "
+                        "through fresh buffers every dispatch; donate "
+                        "the state pytree (lint-ok where the checked or "
+                        "reduction path must keep its inputs)")
 
     # function-scoped rules
     for fn in ast.walk(tree):

@@ -1,24 +1,37 @@
 """Batched Monte-Carlo fleet simulator (see engine.py for the contract)."""
 
 from repro.fleet.engine import FleetParams, fleet_run
-from repro.fleet.metrics import FleetStats, init_stats, summarize
+from repro.fleet.mesh import FLEET_AXIS, available_shards, fleet_mesh, shard_pad
+from repro.fleet.metrics import (
+    CellMoments, FleetStats, cell_moments, cell_rate_keys, init_stats,
+    merge_cell_moments, summarize, summarize_cells,
+)
 from repro.fleet.scenarios import Workload, make_workload, scenario_names
 from repro.fleet.state import FleetState, broadcast_state, make_fleet, stack_states
 from repro.fleet.sweep import SweepConfig, run_sweep
 
 __all__ = [
+    "CellMoments",
+    "FLEET_AXIS",
     "FleetParams",
     "FleetState",
     "FleetStats",
     "SweepConfig",
     "Workload",
+    "available_shards",
     "broadcast_state",
+    "cell_moments",
+    "cell_rate_keys",
+    "fleet_mesh",
     "fleet_run",
     "init_stats",
     "make_fleet",
     "make_workload",
+    "merge_cell_moments",
     "run_sweep",
     "scenario_names",
+    "shard_pad",
     "stack_states",
     "summarize",
+    "summarize_cells",
 ]

@@ -83,8 +83,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import checkify
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from repro.analysis import sanitize as _sanitize
+from repro.fleet import mesh as _mesh
 from repro.core.jax_state import (
     BIG, SchedState, compact_state, fanout_commit,
 )
@@ -111,6 +114,16 @@ class FleetParams:
     stagger: float = 1.0
     #: fused_place_op backend: "auto" | "kernel" | "ref".
     placement_backend: str = "auto"
+    #: replica rows per fused-placement kernel tile (per shard when the
+    #: mesh is on; the kernel clamps to the local batch).
+    placement_block_b: int = 8
+    #: shard the batch axis over this many devices of a 1-D `shard_map`
+    #: mesh (fleet/mesh.py).  0 disables sharding entirely; 1 runs the
+    #: sharded code path on a single-device mesh (useful for testing the
+    #: machinery without multiple devices).  B is padded up to a multiple
+    #: of the mesh size with masked no-op replicas and trimmed from every
+    #: output, so results are bit-identical to the unsharded engine.
+    mesh_shards: int = 0
     #: width of the per-replica victim re-queue buffer (0 disables the
     #: reallocation pass and reverts to capacity-eviction-only preemption).
     requeue_slots: int = 4
@@ -173,6 +186,7 @@ def _place_lp(st: SchedState, q1, dl, src, do, p: FleetParams):
     t1, t2, valid, ok, sel, start, dur, use4, n_drop = fused_place_op(
         st.win_t1, st.win_t2, st.win_valid, st.min_dur, q1, dl, src, do,
         backend=p.placement_backend, cfg_pref=LP2_IDX, cfg_fallback=LP4_IDX,
+        block_b=p.placement_block_b,
     )
     st = st._replace(win_t1=t1, win_t2=t2, win_valid=valid)
     return st, ok, sel, start, dur, use4, n_drop
@@ -503,7 +517,48 @@ def _run_segment_checked(params: FleetParams):
     is deliberately NOT donated: the discharged error value aliases the
     inputs, and sanitized runs trade speed for checks anyway."""
     fn = functools.partial(_segment_impl, params=params, sanitize=True)
+    # repro: lint-ok(host-transfer)  — checked carry intentionally kept
     return jax.jit(checkify.checkify(fn, errors=checkify.user_checks))
+
+
+def _shard_segment(params: FleetParams, *, sanitize: bool):
+    """`_segment_impl` wrapped in `shard_map` over the fleet mesh: every
+    carry leaf and the workload batch axis split into B/shards rows per
+    device; replicas are independent, so the scan body needs no
+    collectives and each shard runs the exact unsharded per-replica math
+    (bit-identical results — the per-replica pipeline never reduces over
+    B)."""
+    mesh = _mesh.fleet_mesh(params.mesh_shards)
+    fn = functools.partial(_segment_impl, params=params, sanitize=sanitize)
+    P = PartitionSpec
+    # prefix specs: carry leaves shard on their leading [B] axis, the
+    # [S, B, ...] workload slices on axis 1, f0/n_frames replicate
+    in_specs = (P(_mesh.FLEET_AXIS), P(None, _mesh.FLEET_AXIS),
+                P(None, _mesh.FLEET_AXIS), P(), P())
+    out_specs = ((P(_mesh.FLEET_AXIS), P(None, _mesh.FLEET_AXIS))
+                 if params.telemetry else P(_mesh.FLEET_AXIS))
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _run_segment_sharded(params: FleetParams):
+    """Fast sharded path: jitted shard_map scan with a donated carry —
+    state buffers stay resident per shard across segments, so the only
+    host interaction per segment is dispatch."""
+    return jax.jit(_shard_segment(params, sanitize=False),
+                   donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _run_segment_sharded_checked(params: FleetParams):
+    """Sanitized sharded path: checkify discharges *outside* shard_map
+    (per-shard error states merge through the transform), not donated for
+    the same aliasing reason as the unsharded checked runner."""
+    # repro: lint-ok(host-transfer)  — checked carry intentionally kept
+    return jax.jit(checkify.checkify(
+        _shard_segment(params, sanitize=True), errors=checkify.user_checks
+    ))
 
 
 def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
@@ -514,12 +569,22 @@ def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
     ``params.telemetry`` is on (the extra return is in-scan time series,
     see obs/telemetry.py; state and stats are bit-identical either way).
     The input `fleet` is left untouched (segments run on donated copies).
+
+    With ``params.mesh_shards >= 1`` the segment scan runs under
+    `shard_map` over the fleet mesh: B is padded to a multiple of the
+    mesh size with masked no-op replicas (trimmed from every output),
+    state buffers live sharded across devices for the whole run, and
+    results are bit-identical to the unsharded engine.
     """
     p = params
     B = fleet.sched.win_t1.shape[0]
     n_dev = p.n_devices
     R = p.requeue_slots
     F = values.shape[0]
+    shards = p.mesh_shards
+    sharded = shards >= 1
+    pad_b = _mesh.shard_pad(B, shards) if sharded else 0
+    Bp = B + pad_b
     assert values.shape[2] == n_dev and fleet.sched.win_t1.shape[1] == n_dev
     assert fleet.rq_valid.shape == (B, R), (
         f"fleet re-queue buffer {fleet.rq_valid.shape} != (B={B}, "
@@ -546,15 +611,43 @@ def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
         bw_scale = jnp.concatenate(
             [bw_scale, jnp.ones((pad, B), jnp.float32)]
         )
-    # copy the carry: _run_segment donates its input buffers, and the
-    # caller's fleet must stay valid (benchmarks re-run the same fleet)
-    carry = jax.tree_util.tree_map(jnp.copy, (
+    if pad_b:
+        # pad the batch so it splits evenly across mesh shards: padded
+        # replicas get no workload (-1 frames), so they advance as pure
+        # no-ops and their (zero) stats rows are trimmed below
+        values = jnp.concatenate(
+            [values, jnp.full(values.shape[:1] + (pad_b, n_dev), -1,
+                              jnp.int32)], axis=1,
+        )
+        bw_scale = jnp.concatenate(
+            [bw_scale, jnp.ones(bw_scale.shape[:1] + (pad_b,),
+                                jnp.float32)], axis=1,
+        )
+    state_tree = (
         fleet.sched, fleet.link_free,
         (fleet.rq_deadline, fleet.rq_src, fleet.rq_valid),
         (fleet.vc_start, fleet.vc_end, fleet.vc_deadline, fleet.vc_src,
          fleet.vc_valid),
-        init_stats(B),
-    ))
+    )
+    # copy the carry: the segment runners donate their input buffers, and
+    # the caller's fleet must stay valid (benchmarks re-run the same
+    # fleet).  The zero stats leaves are copied too — jnp.zeros dedupes
+    # identical constants, and donation rejects aliased buffers.  Batch
+    # padding tiles existing replica rows instead — any valid state
+    # works, the padded columns release no frames.
+    if pad_b:
+        rows = jnp.arange(Bp, dtype=jnp.int32) % B
+        state_tree = jax.tree_util.tree_map(
+            lambda x: jnp.take(x, rows, axis=0), state_tree
+        )
+    else:
+        state_tree = jax.tree_util.tree_map(jnp.copy, state_tree)
+    stats0 = jax.tree_util.tree_map(jnp.copy, init_stats(Bp))
+    carry = (*state_tree, stats0)
+    if sharded:
+        # commit the carry to the mesh once: the donated buffers then
+        # round-trip through every segment without a resharding copy
+        carry = _mesh.put_sharded(carry, _mesh.fleet_mesh(shards))
     nf = jnp.asarray(F, jnp.int32)
     sanitized = _sanitize.enabled()
     telem_segs = []
@@ -567,8 +660,12 @@ def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
             )
             with _profile.span("fleet/segment"):
                 if sanitized:
-                    err, res = _run_segment_checked(p)(*seg_args)
+                    checked = (_run_segment_sharded_checked(p) if sharded
+                               else _run_segment_checked(p))
+                    err, res = checked(*seg_args)
                     err.throw()
+                elif sharded:
+                    res = _run_segment_sharded(p)(*seg_args)
                 else:
                     res = _run_segment(*seg_args, params=p)
             if p.telemetry:
@@ -576,6 +673,10 @@ def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
                 telem_segs.append(ys)
             else:
                 carry = res
+    if pad_b:
+        # drop the shard-padding replicas from every output (device-side
+        # slice; nothing is gathered to the host here)
+        carry = jax.tree_util.tree_map(lambda x: x[:B], carry)
     sched, link_free, rq, vc, stats = carry
     out = FleetState(
         sched=sched, link_free=link_free,
@@ -589,6 +690,6 @@ def fleet_run(fleet: FleetState, values: jnp.ndarray, bw_scale: jnp.ndarray,
     with _profile.span("fleet/telemetry_host_transfer"):
         record = _telemetry.assemble(
             telem_segs, n_frames=F, every=p.telemetry_every,
-            nominal_bw_bps=p.nominal_bw_bps,
+            nominal_bw_bps=p.nominal_bw_bps, n_replicas=B,
         )
     return out, stats, record

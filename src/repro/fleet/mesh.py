@@ -1,0 +1,74 @@
+"""Device-mesh plumbing for the sharded fleet engine.
+
+The fleet's batch axis is embarrassingly parallel — replicas never
+interact — so scaling past one device's memory is a pure data-parallel
+`shard_map` over a 1-D mesh: every `[B, ...]` array in the scan carry
+(and the `[F, B, ...]` workload) splits into `B / shards` rows per
+device, the segmented scan runs unchanged on each shard's slice, and
+only *reduced* metrics ever cross back to the host (`psum`/`pmax`
+inside the sharded region, see metrics.cell_moments), keeping host
+transfer O(metrics) instead of O(B·state).
+
+One axis name (`FLEET_AXIS`) is shared by every sharded program in the
+subsystem so collectives compose.  Meshes are built over a prefix of
+`jax.devices()`; on a CPU-only host an N-way mesh is emulated with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=N
+
+(the recipe the `mesh` CI leg uses — see README "Sharded sweeps").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+#: the one mesh axis the fleet subsystem shards over.
+FLEET_AXIS = "fleet"
+
+
+def available_shards() -> int:
+    """Devices usable as fleet shards in this process."""
+    return jax.device_count()
+
+
+@functools.lru_cache(maxsize=None)
+def fleet_mesh(shards: int) -> Mesh:
+    """A 1-D mesh over the first ``shards`` devices (cached: `Mesh` equality
+    is by device list, and every sharded program in a process must reuse
+    one instance so XLA caches line up)."""
+    n = available_shards()
+    if shards < 1:
+        raise ValueError(f"mesh_shards must be >= 1, got {shards}")
+    if shards > n:
+        raise ValueError(
+            f"mesh_shards={shards} but only {n} JAX device(s) are visible; "
+            f"on a CPU host emulate a mesh with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={shards}"
+        )
+    return Mesh(np.array(jax.devices()[:shards]), (FLEET_AXIS,))
+
+
+def batch_spec(batch_axis: int = 0) -> PartitionSpec:
+    """PartitionSpec sharding ``batch_axis`` over the fleet axis (trailing
+    axes replicated — shard_map leaves unmentioned dims whole)."""
+    return PartitionSpec(*([None] * batch_axis), FLEET_AXIS)
+
+
+def shard_pad(batch: int, shards: int) -> int:
+    """Rows to append so ``batch`` splits evenly across ``shards``."""
+    return (-batch) % shards
+
+
+def put_sharded(tree, mesh: Mesh, batch_axis: int = 0):
+    """Commit every leaf of ``tree`` to the mesh, split on ``batch_axis`` —
+    done once before the segment loop so the donated carry round-trips
+    through `_run_segment_sharded` without a resharding copy."""
+    sharding = NamedSharding(mesh, batch_spec(batch_axis))
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, sharding), tree
+    )

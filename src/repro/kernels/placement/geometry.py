@@ -60,4 +60,10 @@ def geometries():
         _case(8, 4, 3, 2, 16, 8),
         _case(1, 4, 3, 2, 16, 8),       # B=1 calib path
         _case(20, 4, 3, 2, 16, 8),      # padded: 20 -> 24, three tiles
+        # sharded fleet: each mesh shard launches over its local batch
+        # (global B / shards).  B=16 tests on 2/8 shards and sweep
+        # batches of 256/2048 on an 8-way mesh.
+        _case(2, 4, 3, 2, 16, 8),       # B=16 @ 8 shards
+        _case(32, 4, 3, 2, 16, 8),      # B=256 @ 8 shards
+        _case(256, 4, 3, 2, 16, 8),     # B=2048 @ 8 shards (mega sweep)
     ]

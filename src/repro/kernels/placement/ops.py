@@ -16,12 +16,19 @@ def on_tpu() -> bool:
 
 def fused_place_op(t1, t2, valid, min_dur, q1, dl, src, do, *,
                    backend: str = "auto", cfg_pref: int = 1,
-                   cfg_fallback: int = 2):
+                   cfg_fallback: int = 2, block_b: int = 8):
     """One fused placement attempt for the whole fleet batch.
 
     backend: "auto" → Pallas kernel on TPU, jnp oracle elsewhere;
     "kernel" → force the kernel (interpret mode off-TPU); "ref" → force
     the jnp oracle.  Returns the oracle's output tuple either way.
+
+    ``block_b`` is the kernel's replica tile (clamped to B internally).
+    Under the sharded fleet engine each mesh shard launches its own
+    kernel over the B/shards local batch, so the tile is a per-shard
+    knob (FleetParams.placement_block_b) — any new (local-B, block_b)
+    launch geometry must be registered in the kernel's geometry.py for
+    the analysis gate.
     """
     if backend == "auto":
         backend = "kernel" if on_tpu() else "ref"
@@ -29,7 +36,7 @@ def fused_place_op(t1, t2, valid, min_dur, q1, dl, src, do, *,
         return fused_place(
             t1, t2, valid, min_dur, q1, dl, src, do,
             cfg_pref=cfg_pref, cfg_fallback=cfg_fallback,
-            interpret=not on_tpu(),
+            interpret=not on_tpu(), block_b=block_b,
         )
     if backend != "ref":
         raise ValueError(f"unknown placement backend: {backend!r}")

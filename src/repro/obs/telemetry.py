@@ -166,16 +166,21 @@ class TelemetryRecord(NamedTuple):
 
 
 def assemble(segments: list[TelemetryFrame], *, n_frames: int, every: int,
-             nominal_bw_bps: float) -> TelemetryRecord:
+             nominal_bw_bps: float,
+             n_replicas: int | None = None) -> TelemetryRecord:
     """Concatenate per-segment strided series, trim scan padding, and
     return a numpy TelemetryRecord.
 
     The engine guarantees ``every`` divides the segment length, so the
     concatenated rows sit at global ticks ``0, every, 2*every, ...`` —
     rows landing past the true trace length (segment padding) are cut.
+    ``n_replicas`` trims the batch axis to the caller's true B (the
+    sharded engine pads B to a multiple of the mesh size; padded columns
+    are synthetic no-op replicas and must not leak into recordings).
     """
     np_segs = [
-        TelemetryFrame(*(np.asarray(x) for x in seg)) for seg in segments
+        TelemetryFrame(*(np.asarray(x)[:, :n_replicas] for x in seg))
+        for seg in segments
     ]
     series = TelemetryFrame(*(
         np.concatenate([getattr(seg, f) for seg in np_segs], axis=0)

@@ -112,6 +112,61 @@ def test_unregistered_pallas_call():
                        registered_paths={"kernels/foo/foo.py"}) == []
 
 
+def test_host_transfer_on_device_get():
+    src = (
+        "import jax\n"
+        "def f(stats):\n"
+        "    return jax.device_get(stats)\n"
+    )
+    assert _rules(lint_source(src, "fleet/foo.py")) == ["host-transfer"]
+    # rule is scoped to the fleet hot path
+    assert lint_source(src, "figures/foo.py") == []
+
+
+def test_host_transfer_on_numpy_in_scan_loop():
+    src = (
+        "import numpy as np\n"
+        "import jax\n"
+        "def f(c, xs):\n"
+        "    c, _ = jax.lax.scan(lambda c, x: (c + x, None), c, xs)\n"
+        "    return np.asarray(c)\n"
+    )
+    assert _rules(lint_source(src, "fleet/foo.py")) == ["host-transfer"]
+    # numpy outside a scan-bearing function is host-side reduction code
+    no_scan = (
+        "import numpy as np\n"
+        "def g(c):\n"
+        "    return np.asarray(c)\n"
+    )
+    assert lint_source(no_scan, "fleet/foo.py") == []
+
+
+def test_host_transfer_on_item_in_scan_loop():
+    src = (
+        "import jax\n"
+        "def f(c, xs):\n"
+        "    c, _ = jax.lax.scan(lambda c, x: (c + x, None), c, xs)\n"
+        "    return c.sum().item()\n"
+    )
+    assert _rules(lint_source(src, "fleet/foo.py")) == ["host-transfer"]
+
+
+def test_host_transfer_on_undonated_jit_expression():
+    src = (
+        "import jax\n"
+        "def make(fn):\n"
+        "    return jax.jit(fn)\n"
+    )
+    assert _rules(lint_source(src, "fleet/foo.py")) == ["host-transfer"]
+    donated = src.replace("jax.jit(fn)", "jax.jit(fn, donate_argnums=(0,))")
+    assert lint_source(donated, "fleet/foo.py") == []
+    suppressed = src.replace(
+        "    return jax.jit(fn)",
+        "    # repro: lint-ok(host-transfer)\n    return jax.jit(fn)",
+    )
+    assert lint_source(suppressed, "fleet/foo.py") == []
+
+
 def test_leaky_fixture_trips():
     fixture = os.path.join(SRC_ROOT, "analysis", "fixtures", "leaky_jit.py")
     findings = lint_paths(SRC_ROOT, [fixture])
